@@ -1,0 +1,34 @@
+"""Paper Fig. 8: per-layer AlexNet processing time (batch 4) — TMA INT5/INT8
+vs Eyeriss and DSIP."""
+from __future__ import annotations
+
+import time
+
+from repro.core import baselines as bl, tma_model as tm
+
+
+def run():
+    t0 = time.time()
+    layers = tm.alexnet_layers()
+    t5 = {r.name: r.time_s for r in tm.analyze_network(layers, 5, batch=4)}
+    t8 = {r.name: r.time_s for r in tm.analyze_network(layers, 8, batch=4)}
+    print("Fig. 8 — AlexNet per-layer time, batch=4 (ms):")
+    print(f"  {'layer':6s} {'TMA5':>8s} {'TMA8':>8s} {'Eyeriss':>9s} "
+          f"{'DSIP':>9s} {'spdup5/Ey':>10s}")
+    key_ratios = {}
+    for l in layers:
+        ey = bl.EYERISS.layer_time_s(l, 4)
+        ds = bl.DSIP.layer_time_s(l, 4)
+        r = ey / t5[l.name]
+        key_ratios[l.name] = r
+        print(f"  {l.name:6s} {t5[l.name]*1e3:8.2f} {t8[l.name]*1e3:8.2f} "
+              f"{ey*1e3:9.2f} {ds*1e3:9.2f} {r:10.1f}")
+    print(f"  conv3 speedup vs Eyeriss: {key_ratios['conv3']:.1f}x "
+          "(paper 24.6x); vs DSIP: "
+          f"{bl.DSIP.layer_time_s(layers[2],4)/t5['conv3']:.1f}x (paper 41.7x)")
+    us = (time.time() - t0) * 1e6
+    return [("fig8_latency", us, f"conv3_vs_eyeriss={key_ratios['conv3']:.1f}x")]
+
+
+if __name__ == "__main__":
+    run()

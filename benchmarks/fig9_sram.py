@@ -1,0 +1,33 @@
+"""Paper Fig. 9: Psum SRAM-access reduction vs Eyeriss (AlexNet, batch 1)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import baselines as bl, tma_model as tm
+
+
+def run():
+    t0 = time.time()
+    layers = tm.alexnet_layers()
+    print("Fig. 9 — Psum SRAM accesses (AlexNet, batch 1):")
+    best_conv = best_fc = 0.0
+    for l in layers:
+        tma = tm.psum_sram_accesses_tma(l)
+        ey = bl.EYERISS.psum_sram_accesses(l)
+        red = ey / tma
+        kind = "conv" if isinstance(l, tm.ConvLayer) else "fc"
+        if kind == "conv":
+            best_conv = max(best_conv, red)
+        else:
+            best_fc = max(best_fc, red)
+        print(f"  {l.name:6s} TMA {tma:>10,}  Eyeriss {ey:>12,.0f}  "
+              f"reduction {red:6.0f}x")
+    print(f"  max reduction: conv {best_conv:.0f}x (paper ~74x), "
+          f"fc {best_fc:.0f}x (paper ~240x)")
+    us = (time.time() - t0) * 1e6
+    return [("fig9_sram", us,
+             f"conv_max={best_conv:.0f}x;fc_max={best_fc:.0f}x")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Microbenchmark of the psi_matmul kernels (CPU oracle path timing + the
+analytic HBM-traffic advantage that is the kernel's reason to exist).
+
+Wall-times here are CPU-oracle numbers (the container has no TPU); the
+roofline-relevant quantity is the weight-byte column: bf16 2.0 B/w,
+PSI-INT8 1.0 B/w, PSI-INT5 0.625 B/w.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import psi
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    M, K, N = 256, 2048, 2048
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    q8 = psi.quantize_weights(w, 8, axis=0)
+    q5 = psi.quantize_weights(w, 5, axis=0)
+    planes = psi.pack_int5(q5.codes)
+
+    f_bf16 = jax.jit(lambda x, w: x @ w)
+    f_int8 = jax.jit(lambda x, c, s: ref.psi_matmul_int8_ref(x, c, s))
+    f_int5 = jax.jit(lambda x, p, s: ref.psi_matmul_int5_ref(x, p, s))
+
+    t_b = _time(f_bf16, x, w)
+    t_8 = _time(f_int8, x, q8.codes, q8.scale.reshape(-1))
+    t_5 = _time(f_int5, x, planes, q5.scale.reshape(-1))
+    wb = K * N
+    print(f"psi_matmul {M}x{K}x{N} (CPU oracle timings; bytes = HBM model):")
+    print(f"  bf16      {t_b:9.0f} us   weight bytes {2.0 * wb / 1e6:7.2f} MB")
+    print(f"  psi-int8  {t_8:9.0f} us   weight bytes {1.0 * wb / 1e6:7.2f} MB (2.0x less)")
+    print(f"  psi-int5  {t_5:9.0f} us   weight bytes {0.625 * wb / 1e6:7.2f} MB (3.2x less)")
+    rows.append(("kernel_bf16", t_b, f"bytes={2.0*wb:.0f}"))
+    rows.append(("kernel_psi8", t_8, f"bytes={1.0*wb:.0f}"))
+    rows.append(("kernel_psi5", t_5, f"bytes={0.625*wb:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

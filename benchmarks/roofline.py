@@ -1,0 +1,57 @@
+"""Roofline reporter: analytic terms (repro.perf.roofline_model) joined with
+the dry-run JSON (compile proof, memory_analysis, collective inventory).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--quant psi8] [--json out]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
+from repro.perf.roofline_model import analytic_cell, roofline_terms
+
+
+def full_table(quant: str = "psi8", chips: int = 256):
+    rows = []
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            ok, why = shape_applicable(cfg, SHAPES[s])
+            if not ok:
+                rows.append({"arch": a, "shape": s, "skipped": why})
+                continue
+            q = quant if SHAPES[s].kind != "train" else "none"
+            cell = analytic_cell(a, s, quant=q, chips=chips)
+            rt = roofline_terms(cell, chips=chips)
+            rows.append({"arch": a, "shape": s, "quant": q,
+                         "flops_per_dev": cell.flops / chips,
+                         "hbm_bytes_per_dev": cell.hbm_bytes / chips,
+                         "coll_bytes_per_dev": cell.coll_bytes_per_dev,
+                         **rt})
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quant", default="psi8")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = full_table(args.quant)
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'bound':>11s} {'frac':>6s}")
+    print(hdr)
+    for r in rows:
+        if "skipped" in r:
+            print(f"{r['arch']:22s} {r['shape']:12s} SKIP ({r['skipped'][:50]}...)")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['compute_s']:9.2e} "
+              f"{r['memory_s']:9.2e} {r['collective_s']:9.2e} "
+              f"{r['bottleneck']:>11s} {r['roofline_fraction']:6.2f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

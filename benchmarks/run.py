@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+reporter.  Prints ``name,us_per_call,derived`` CSV at the end.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig8_latency, fig9_sram, kernel_bench,
+                            table1_quant, table2_perf, table3_compare)
+    from benchmarks.roofline import full_table
+
+    rows = []
+    for mod in (table1_quant, table2_perf, table3_compare, fig8_latency,
+                fig9_sram, kernel_bench):
+        print(f"\n=== {mod.__name__} ===")
+        rows.extend(mod.run())
+
+    print("\n=== roofline (analytic, psi8 serving / bf16 train) ===")
+    t0 = time.time()
+    table = full_table("psi8")
+    worst = None
+    for r in table:
+        if "skipped" in r:
+            continue
+        if worst is None or r["roofline_fraction"] < worst["roofline_fraction"]:
+            worst = r
+    n_cells = sum(1 for r in table if "skipped" not in r)
+    print(f"  {n_cells} runnable cells; worst roofline fraction: "
+          f"{worst['arch']} x {worst['shape']} = {worst['roofline_fraction']:.3f}")
+    rows.append(("roofline_table", (time.time() - t0) * 1e6,
+                 f"cells={n_cells};worst={worst['roofline_fraction']:.3f}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table II: performance of the implemented TMA accelerator
+(2,304 MACs, 4 MB SRAM, 200 MHz, 576/288 GMACS peak, 62 fps AlexNet)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import tma_model as tm
+
+
+def run():
+    t0 = time.time()
+    layers = tm.alexnet_layers()
+    rows = {
+        "n_macs": tm.MACS_PARALLEL,
+        "sram_mb": tm.SRAM_BYTES / 2 ** 20,
+        "clock_mhz": tm.FPGA_FREQ_HZ / 1e6,
+        "fifo_bytes": tm.FIFO_BYTES,
+        "peak_gmacs_int5": tm.peak_throughput_gmacs(5, 250e6),
+        "peak_gmacs_int8": tm.peak_throughput_gmacs(8, 250e6),
+        "gate_count": tm.gate_count_model()["total"],
+        "alexnet_fps_int8": tm.frame_rate(layers, 8),
+        "alexnet_fps_int5": tm.frame_rate(layers, 5),
+        "paper_alexnet_fps": 62.0,
+    }
+    print("Table II — implemented TMA accelerator:")
+    for k, v in rows.items():
+        print(f"  {k:22s} {v:,.1f}" if isinstance(v, float) else
+              f"  {k:22s} {v:,}")
+    print("  note: modeled fps excludes DRAM/control overheads -> sits "
+          f"{rows['alexnet_fps_int8'] / rows['paper_alexnet_fps']:.2f}x "
+          "above the published 62 fps (INT8)")
+    us = (time.time() - t0) * 1e6
+    return [("table2_perf", us,
+             f"fps_int8={rows['alexnet_fps_int8']:.1f};peak_int5="
+             f"{rows['peak_gmacs_int5']:.0f}GMACS")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Table III: comparison with Eyeriss / ConvNet / DSIP
+(MACs, power, frequency, GMACs, GMACs/W)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import baselines as bl
+
+
+def run():
+    t0 = time.time()
+    rows = bl.table3_rows()
+    print("Table III — comparison with prior works:")
+    hdr = (f"  {'accel':12s} {'w-bits':>6s} {'a-bits':>6s} {'MACs':>6s} "
+           f"{'mW':>7s} {'MHz':>5s} {'GMACs':>7s} {'GMACs/W':>8s}")
+    print(hdr)
+    for r in rows:
+        print(f"  {r['name']:12s} {r['weight_bits']:>6} {r['act_bits']:>6} "
+              f"{r['n_macs']:>6} {r['power_mw']:>7.1f} {r['freq_mhz']:>5.0f} "
+              f"{r['gmacs']:>7.1f} {r['gmacs_per_w']:>8.1f}")
+    tma5 = next(r for r in rows if r["name"] == "TMA (INT5)")
+    conv = next(r for r in rows if r["name"] == "ConvNet")
+    ratio = tma5["gmacs_per_w"] / conv["gmacs_per_w"]
+    print(f"  TMA INT5 vs ConvNet efficiency: {ratio:.1f}x (paper ~12.7x)")
+    us = (time.time() - t0) * 1e6
+    return [("table3_compare", us,
+             f"tma5={tma5['gmacs_per_w']:.0f}GMACs/W;vs_convnet={ratio:.1f}x")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,175 @@
+"""Fault-tolerant checkpointing.
+
+* **Atomic**: write to ``<dir>/tmp.<step>``, fsync, then ``os.rename`` — a
+  crash mid-save never corrupts the latest checkpoint.
+* **Async**: ``save(..., blocking=False)`` snapshots to host memory
+  (device_get) and writes on a background thread, overlapping I/O with the
+  next training steps; ``wait()`` joins before the next save or exit.
+* **Keep-k** rotation, plus "keep every Nth" permanent snapshots.
+* **Resumable data state**: the data-iterator state dict rides in the
+  checkpoint, so restart resumes the exact sample stream.
+* **Elastic reshard-on-load**: checkpoints store *global* (unsharded) arrays;
+  ``restore(..., shardings=...)`` device_puts each leaf with the *current*
+  mesh's NamedSharding — a job restarted on a different device count or mesh
+  shape just reshards (DESIGN.md §5).
+
+Format: one ``msgpack``-framed binary per step directory + a JSON manifest —
+no external checkpoint libraries (offline container).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        items = tree.items()
+        for k, v in items:
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+        if len(tree) == 0:
+            out[prefix + "@emptylist"] = np.zeros((0,), np.int8)
+        if isinstance(tree, tuple):
+            out[prefix + "@tuple"] = np.zeros((0,), np.int8)
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        keys = set(node)
+        is_tuple = "@tuple" in keys
+        keys.discard("@tuple")
+        if "@emptylist" in keys and len(keys) == 1:
+            return () if is_tuple else []
+        if keys and all(k.startswith("#") for k in keys):
+            seq = [rebuild(node[f"#{i}"]) for i in range(len(keys))]
+            return tuple(seq) if is_tuple else seq
+        return {k: rebuild(v) for k, v in node.items() if k != "@tuple"}
+
+    return rebuild(root)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, keep_every: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.keep_every = keep_every
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Dict, extra: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        if blocking:
+            self._write(step, host_tree, extra or {})
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, extra or {}),
+                daemon=True)
+            self._thread.start()
+
+    def _write(self, step: int, host_tree, extra: Dict) -> None:
+        import msgpack
+        tmp = os.path.join(self.dir, f"tmp.{step}")
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        os.makedirs(tmp, exist_ok=True)
+        flat = _flatten(host_tree)
+        manifest = {"step": step, "extra": extra, "arrays": {}}
+        with open(os.path.join(tmp, "arrays.bin"), "wb") as f:
+            for name, arr in flat.items():
+                buf = np.ascontiguousarray(arr)
+                manifest["arrays"][name] = {
+                    "dtype": str(buf.dtype), "shape": list(buf.shape),
+                    "offset": f.tell(), "nbytes": buf.nbytes}
+                f.write(buf.tobytes())
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        protect = {s for s in steps
+                   if self.keep_every and s % self.keep_every == 0}
+        victims = [s for s in steps[:-self.keep] if s not in protect]
+        for s in victims:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        pat = re.compile(r"step_(\d+)$")
+        out = []
+        for name in os.listdir(self.dir):
+            m = pat.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, shardings=None):
+        """Returns (tree, extra).  ``shardings``: optional pytree (same
+        structure) of jax.sharding.Sharding — leaves are device_put with the
+        current mesh layout (elastic restart path)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        with open(os.path.join(d, "arrays.bin"), "rb") as f:
+            data = f.read()
+        for name, meta in manifest["arrays"].items():
+            arr = np.frombuffer(
+                data, dtype=np.dtype(meta["dtype"]),
+                count=int(np.prod(meta["shape"])) if meta["shape"] else 1,
+                offset=meta["offset"]).reshape(meta["shape"])
+            flat[name] = arr
+        tree = _unflatten(flat)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(jnp.asarray(x), s),
+                tree, shardings)
+        return tree, manifest["extra"]

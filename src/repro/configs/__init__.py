@@ -1,0 +1,26 @@
+"""Architecture registry: one module per assigned architecture.
+
+Importing this package registers all configs; use ``get_config(name)``.
+"""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, SHAPES, get_config, list_configs,
+    reduced_config, register, shape_applicable,
+)
+
+# Assigned architectures (public-literature configs; tiers in each module).
+from repro.configs import chatglm3_6b        # noqa: F401
+from repro.configs import qwen3_8b           # noqa: F401
+from repro.configs import granite_34b        # noqa: F401
+from repro.configs import phi3_medium_14b    # noqa: F401
+from repro.configs import whisper_base       # noqa: F401
+from repro.configs import qwen3_moe_30b_a3b  # noqa: F401
+from repro.configs import mixtral_8x22b      # noqa: F401
+from repro.configs import recurrentgemma_9b  # noqa: F401
+from repro.configs import qwen2_vl_2b        # noqa: F401
+from repro.configs import falcon_mamba_7b    # noqa: F401
+
+ASSIGNED_ARCHS = (
+    "chatglm3-6b", "qwen3-8b", "granite-34b", "phi3-medium-14b",
+    "whisper-base", "qwen3-moe-30b-a3b", "mixtral-8x22b",
+    "recurrentgemma-9b", "qwen2-vl-2b", "falcon-mamba-7b",
+)

@@ -1,0 +1,239 @@
+"""Config system: model architecture, input shapes, quantization and
+parallelism settings.  Every assigned architecture is a `ModelConfig` in its
+own module under ``repro.configs``; `get_config(name)` is the registry entry
+point used by ``--arch`` flags throughout the launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model architecture.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+
+    # --- attention ---
+    attn_type: str = "full"         # full | swa (sliding window)
+    window: int = 0                 # swa / local-attention window
+    rope: str = "rope"              # rope | rope2d | mrope | sinusoidal | none
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    act: str = "swiglu"             # swiglu | geglu | gelu
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- SSM (mamba1) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_dt_rank: int = 0            # 0 -> d_model // 16
+
+    # --- hybrid (recurrentgemma): repeating block pattern ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    d_rnn: int = 0                  # 0 -> d_model
+    rglru_c: float = 8.0
+
+    # --- encoder-decoder (whisper backbone; frontend stubbed) ---
+    n_enc_layers: int = 0
+    enc_frames: int = 1500
+
+    # --- VLM (qwen2-vl backbone; vision frontend stubbed) ---
+    vision_patches: int = 0
+
+    # --- numerics / technique ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    quant_mode: str = "none"        # none | qat5 | qat8 | psi5 | psi8
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True        # stack layers + lax.scan (compile speed)
+
+    # --- activation layout (set by the launcher; Megatron-style sequence
+    # sharding of the residual stream between blocks — the scan-saved
+    # activations would otherwise be (L, B, S, d) replicated on "model") ---
+    act_seq_axis: str = ""                 # e.g. "model"
+    act_batch_axes: Tuple[str, ...] = ()   # e.g. ("data",) / ("pod", "data")
+    moe_expert_axis: str = ""              # "model" when E % mesh_model == 0
+
+    # --- beyond-paper: KV-cache compression (extends the paper's weight-
+    # compression insight to the tensor that actually dominates decode HBM
+    # traffic at large batch; see EXPERIMENTS.md §Perf) ---
+    kv_quant: str = ""                     # "" | "int8"
+
+    # --- citation bookkeeping (verification tier from the assignment) ---
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.ssm_dt_rank or max(self.d_model // 16, 1)
+
+    @property
+    def resolved_d_rnn(self) -> int:
+        return self.d_rnn or self.d_model
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: bounded decode state (SSM / hybrid / SWA)."""
+        return (self.family in ("ssm", "hybrid")
+                or (self.attn_type == "swa" and self.window > 0))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        q = self.n_heads * hd
+        kv = self.n_kv_heads * hd
+        n = self.vocab_size * d                       # embed
+        if not self.tie_embeddings:
+            n += d * self.vocab_size                  # lm head
+        def attn_params():
+            return d * q + 2 * d * kv + q * d
+        def mlp_params(ff):
+            if self.act in ("swiglu", "geglu"):
+                return 3 * d * ff
+            return 2 * d * ff
+        if self.family == "ssm":
+            di, r, s = self.d_inner, self.resolved_dt_rank, self.ssm_state
+            per = (d * 2 * di + di * self.ssm_conv + di * (r + 2 * s)
+                   + r * di + di * s + di + di * d)
+            n += L * per
+        elif self.family == "hybrid":
+            pat = self.block_pattern or ("rec",)
+            dr = self.resolved_d_rnn
+            rec = 2 * d * dr + dr * self.ssm_conv + 2 * dr * dr + dr * d
+            for i in range(L):
+                kind = pat[i % len(pat)]
+                n += (attn_params() if kind == "attn" else rec) + mlp_params(self.d_ff)
+        elif self.family == "moe":
+            per = attn_params() + d * self.n_experts  # router
+            per += self.n_experts * 3 * d * self.d_ff
+            n += L * per
+        elif self.family == "encdec":
+            enc = self.n_enc_layers * (attn_params() + mlp_params(self.d_ff))
+            dec = L * (2 * attn_params() + mlp_params(self.d_ff))
+            n += enc + dec
+        else:                                          # dense / vlm
+            n += L * (attn_params() + mlp_params(self.d_ff))
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        full = self.param_count()
+        expert = self.n_layers * self.n_experts * 3 * self.d_model * self.d_ff
+        active = expert * self.top_k / self.n_experts
+        return int(full - expert + active)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned to every LM-family architecture).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """40-cell applicability matrix (skips recorded in DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 524k dense-KV decode is the "
+                       "quadratic regime long_500k excludes (DESIGN.md §4)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def list_configs():
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests: identical code paths,
+    laptop-scale shapes (widths multiples of 8 for INT5 packing).
+
+    dtype defaults to float32 here: the CPU backend's DotThunk lacks some
+    bf16 dot configurations that fused scan bodies produce; the TPU-target
+    bf16 path is exercised by the dry-run (lower+compile, no execution).
+    capacity_factor is raised so MoE token dropping cannot make the
+    decode-vs-forward consistency checks diverge at toy batch sizes."""
+    small = dict(
+        dtype="float32",
+        capacity_factor=max(cfg.capacity_factor, 8.0) if cfg.n_experts else cfg.capacity_factor,
+        n_layers=max(2, len(cfg.block_pattern) or 2),
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        window=min(cfg.window, 32) if cfg.window else 0,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        ssm_state=min(cfg.ssm_state, 8) if cfg.ssm_state else 0,
+        ssm_dt_rank=8 if cfg.family == "ssm" else 0,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        enc_frames=16 if cfg.n_enc_layers else 1500,
+        vision_patches=min(cfg.vision_patches, 8) if cfg.vision_patches else 0,
+        d_rnn=64 if cfg.family == "hybrid" else 0,
+        scan_layers=cfg.scan_layers,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,16 @@
+"""falcon-mamba-7b [arXiv:2410.05355; unverified] — attention-free Mamba-1 SSM.
+
+PSI quantization applies to the in/x/dt/out projections (~97 % of params);
+the selective-scan recurrence itself is elementwise (DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    rope="none",
+    ssm_state=16, ssm_expand=2, ssm_conv=4, ssm_dt_rank=256,
+    norm="rmsnorm",
+    source="arXiv:2410.05355; unverified",
+))

@@ -1,0 +1,108 @@
+"""Analytic models of the accelerators the paper compares against
+(Table III, Figs. 8-9): Eyeriss [5], ConvNet [6], DSIP [8].
+
+The paper gives each baseline's published operating point (PE count, frequency,
+power, GMACS).  For per-layer AlexNet latency (Fig. 8, batch=4) we model each
+baseline as ``time = MACs / (PEs * freq * util_layer)`` with per-layer
+utilization factors taken from the baselines' own publications where stated and
+otherwise fitted to their published whole-network frame rates.  EXPERIMENTS.md
+reports our reproduced speed-up ratios side-by-side with the paper's claimed
+ones (24.6x / 41.7x Conv3, 13.9x / 14.9x FC1, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+from repro.core import tma_model
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineAccel:
+    name: str
+    n_macs: int
+    freq_hz: float
+    power_w: float
+    weight_bits: int
+    act_bits: int
+    gmacs_peak: float           # Table III "Throughput"
+    conv_util: Dict[str, float]  # per-layer utilization (fit / published)
+    fc_util: float
+    psums_per_cycle: float       # Psum words to SRAM per active cycle (Fig. 9)
+    fc_psums_per_cycle: float = None  # FC layers use a smaller PE slice
+
+    def layer_time_s(self, layer, batch: int = 1) -> float:
+        util = (self.conv_util.get(layer.name, 0.5)
+                if isinstance(layer, tma_model.ConvLayer) else self.fc_util)
+        return layer.macs * batch / (self.n_macs * self.freq_hz * util)
+
+    def layer_cycles(self, layer, batch: int = 1) -> float:
+        return self.layer_time_s(layer, batch) * self.freq_hz
+
+    def psum_sram_accesses(self, layer, batch: int = 1) -> float:
+        ppc = (self.psums_per_cycle if isinstance(layer, tma_model.ConvLayer)
+               else (self.fc_psums_per_cycle or self.psums_per_cycle))
+        return self.layer_cycles(layer, batch) * ppc
+
+    def gmacs_per_watt(self) -> float:
+        return self.gmacs_peak / self.power_w
+
+
+# Eyeriss (ISCA'16 / JSSC'17): 168 PEs, 200-250 MHz, 278 mW, 23.1 GMACS
+# (Table III row).  Row-stationary utilization is high on 3x3/5x5 conv and
+# poor on FC (no input reuse); per-layer factors fitted to the JSSC AlexNet
+# batch-4 report (~115 ms for the 5 conv layers).
+EYERISS = BaselineAccel(
+    name="Eyeriss", n_macs=168, freq_hz=200e6, power_w=0.278,
+    weight_bits=16, act_bits=16, gmacs_peak=23.1,
+    conv_util={"conv1": 0.75, "conv2": 0.39, "conv3": 0.484,
+               "conv4": 0.46, "conv5": 0.53},
+    fc_util=0.077,
+    psums_per_cycle=12.0,   # paper §IV-B: "Eyeriss transmits 12 Psums"
+    fc_psums_per_cycle=3.0,  # FC mapping drives a quarter of the column I/O
+)
+
+# ConvNet (Moons & Verhelst, JSSC'17): 256 MACs, 204 MHz, 274 mW, 52.2 GMACS.
+CONVNET = BaselineAccel(
+    name="ConvNet", n_macs=256, freq_hz=204e6, power_w=0.274,
+    weight_bits=16, act_bits=16, gmacs_peak=52.2,
+    conv_util={"conv1": 0.9, "conv2": 0.85, "conv3": 0.85,
+               "conv4": 0.85, "conv5": 0.85},
+    fc_util=0.3,
+    psums_per_cycle=4.0,
+)
+
+# DSIP (Jo et al., JSSC'18): 64 MACs, 250 MHz, 88.6 mW, 30.1 GMACS.
+DSIP = BaselineAccel(
+    name="DSIP", n_macs=64, freq_hz=250e6, power_w=0.0886,
+    weight_bits=16, act_bits=16, gmacs_peak=30.1,
+    conv_util={"conv1": 0.80, "conv2": 0.75, "conv3": 0.60,
+               "conv4": 0.70, "conv5": 0.70},
+    fc_util=0.25,
+    psums_per_cycle=4.0,
+)
+
+BASELINES = {"eyeriss": EYERISS, "convnet": CONVNET, "dsip": DSIP}
+
+
+def table3_rows(freq_hz: float = tma_model.ASIC_FREQ_HZ) -> Sequence[dict]:
+    """Reproduce Table III: baselines (published numbers) + this work
+    (from the TMA cycle/energy model)."""
+    rows = []
+    for b in (EYERISS, CONVNET, DSIP):
+        rows.append({
+            "name": b.name, "weight_bits": b.weight_bits, "act_bits": b.act_bits,
+            "n_macs": b.n_macs, "power_mw": b.power_w * 1e3,
+            "freq_mhz": b.freq_hz / 1e6, "gmacs": b.gmacs_peak,
+            "gmacs_per_w": b.gmacs_per_watt(),
+        })
+    for bits in (5, 8):
+        rows.append({
+            "name": f"TMA (INT{bits})", "weight_bits": bits, "act_bits": 8,
+            "n_macs": tma_model.MACS_PARALLEL,
+            "power_mw": tma_model.power_w(freq_hz) * 1e3,
+            "freq_mhz": freq_hz / 1e6,
+            "gmacs": tma_model.peak_throughput_gmacs(bits, freq_hz),
+            "gmacs_per_w": tma_model.macs_per_watt(bits, freq_hz) / 1e9,
+        })
+    return rows

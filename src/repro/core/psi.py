@@ -1,0 +1,296 @@
+"""Partial-Sub-Integer (PSI) quantization — the core technique of the TMA paper.
+
+The paper (Eq. 1) decomposes the product of an integer weight ``w`` and input ``X``
+into 2N signed powers of two::
+
+    w * X = sum_k (s1_k * 2^{n1_k} * X  +  s2_k * 2^{n2_k} * X),   s in {-1, 0, 1}
+
+* INT5 weights use 2 PSIs (N=1).  Every 5-bit integer is exactly representable
+  except w in {+-11, +-13}, where the best two-term approximation errs by ~9 %
+  (Table I of the paper).
+* INT8 weights use 4 PSIs (N=2) and the decomposition is exact for all of
+  [-128, 127].
+
+On the TMA ASIC the decomposition removes multipliers.  On TPU (our target) the
+same decomposition is used as a *weight-compression format*: the stored code is
+5 or 8 bits per weight instead of 16, and the Pallas kernel reconstructs the
+weight tile inside VMEM with shifts (see ``repro.kernels.psi_matmul``), cutting
+HBM weight traffic — the dominant cost of memory-bound inference.
+
+Everything here is exact-integer bookkeeping; tables are built once in numpy at
+import time (32 + 256 entries) and the runtime paths are pure ``jnp``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Integer ranges per weight bit-width (paper: INT5 -> 2 PSIs, INT8 -> 4 PSIs).
+# ---------------------------------------------------------------------------
+INT5_MIN, INT5_MAX = -16, 15
+INT8_MIN, INT8_MAX = -128, 127
+
+N_PSI = {5: 2, 8: 4}
+# Exponent range: INT5 needs 2^4 (15 = 16 - 1); INT8 needs 2^7.
+MAX_EXP = {5: 4, 8: 7}
+
+
+def _signed_power_values(max_exp: int) -> np.ndarray:
+    """All values of s * 2^n for s in {-1,0,1}, n in [0, max_exp]."""
+    powers = 2 ** np.arange(max_exp + 1)
+    return np.unique(np.concatenate([[0], powers, -powers]))
+
+
+@functools.lru_cache(maxsize=None)
+def _best_decomposition_table(bits: int) -> np.ndarray:
+    """For every integer in the INT<bits> range, the best <=N_PSI-term signed
+    power-of-two decomposition (minimum absolute error; ties broken toward the
+    smaller reconstructed magnitude, matching a truncating hardware rounder).
+
+    Returns int16 array of shape (range_size, 2 * n_psi): [s_1, n_1, ..., s_N, n_N]
+    indexed by (w - w_min).  Unused terms have s=0, n=0.
+    """
+    n_psi = N_PSI[bits]
+    max_exp = MAX_EXP[bits]
+    w_min = INT5_MIN if bits == 5 else INT8_MIN
+    w_max = INT5_MAX if bits == 5 else INT8_MAX
+    terms = []  # (value, sign, exp) including the zero term
+    terms.append((0, 0, 0))
+    for n in range(max_exp + 1):
+        terms.append((1 << n, 1, n))
+        terms.append((-(1 << n), -1, n))
+
+    # Dynamic programming over number of terms: best_k[v] = decomposition of v
+    # with exactly <= k terms.  Value space is bounded by n_psi * 2^max_exp.
+    vmax = n_psi * (1 << max_exp)
+    # reachable[v + vmax] = tuple of (s, n) pairs, or None
+    reachable = {0: ()}
+    for _ in range(n_psi):
+        new = dict(reachable)
+        for v, combo in reachable.items():
+            for tv, ts, tn in terms[1:]:
+                nv = v + tv
+                if -vmax <= nv <= vmax and (nv not in new or len(new[nv]) > len(combo) + 1):
+                    new[nv] = combo + ((ts, tn),)
+        reachable = new
+
+    table = np.zeros((w_max - w_min + 1, 2 * n_psi), dtype=np.int16)
+    for w in range(w_min, w_max + 1):
+        # pick reachable value closest to w; tie -> smaller |value|
+        best_v, best_err = None, None
+        for v in reachable:
+            err = abs(v - w)
+            if best_err is None or err < best_err or (
+                err == best_err and abs(v) < abs(best_v)
+            ):
+                best_v, best_err = v, err
+        combo = reachable[best_v]
+        row = []
+        for (s, n) in combo:
+            row.extend([s, n])
+        while len(row) < 2 * n_psi:
+            row.extend([0, 0])
+        table[w - w_min] = row
+    return table
+
+
+@functools.lru_cache(maxsize=None)
+def psi_value_table(bits: int) -> np.ndarray:
+    """Reconstructed integer value for every code in the INT<bits> range.
+
+    ``psi_value_table(5)[w + 16]`` is the integer the hardware actually
+    multiplies by when the stored weight is ``w`` — equal to ``w`` everywhere
+    except +-11 -> +-10 and +-13 -> +-12 (the paper's ~9 % worst case).
+    """
+    tab = _best_decomposition_table(bits)
+    signs = tab[:, 0::2].astype(np.int64)
+    exps = tab[:, 1::2].astype(np.int64)
+    return np.sum(signs * (1 << exps), axis=1).astype(np.int32)
+
+
+def psi_decompose_int(w: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decompose integer weights into (signs, exps), each ``(n_psi,) + w.shape``.
+
+    Mirrors the paper's Weight-decomposition block (Fig. 6): the stored integer
+    weight is decoded into the per-PSI (s, n) register values fed to the SAMs.
+    """
+    w_min = INT5_MIN if bits == 5 else INT8_MIN
+    tab = jnp.asarray(_best_decomposition_table(bits))
+    rows = tab[w.astype(jnp.int32) - w_min]
+    signs = jnp.moveaxis(rows[..., 0::2], -1, 0).astype(jnp.int32)
+    exps = jnp.moveaxis(rows[..., 1::2], -1, 0).astype(jnp.int32)
+    return signs, exps
+
+
+def psi_reconstruct(signs: jnp.ndarray, exps: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`psi_decompose_int` — sum of signed shifts.
+
+    This is exactly what one SAM + the PSI-accumulation block compute.
+    """
+    return jnp.sum(signs * (1 << exps), axis=0).astype(jnp.int32)
+
+
+def psi_project_int(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Project integer weights onto the PSI-representable set (what the
+    hardware effectively multiplies by)."""
+    w_min = INT5_MIN if bits == 5 else INT8_MIN
+    tab = jnp.asarray(psi_value_table(bits))
+    return tab[w.astype(jnp.int32) - w_min]
+
+
+def sam_multiply(x: jnp.ndarray, signs: jnp.ndarray, exps: jnp.ndarray) -> jnp.ndarray:
+    """Bit-faithful model of one SAM block (Fig. 2): mux(X, -X, 0) then barrel
+    shift, one partial sub-integer per (sign, exp) pair; PSIs are then summed
+    (the MOA's job).  ``x`` is the INT8 activation."""
+    x = x.astype(jnp.int32)
+    psis = jnp.where(signs == 0, 0, jnp.where(signs > 0, x, -x)) << exps
+    return jnp.sum(psis, axis=0)
+
+
+def moa_sign_extension_sum(operands: jnp.ndarray, in_bits: int, out_bits: int) -> jnp.ndarray:
+    """The Appendix trick: summing sign-extended two's-complement operands is
+    equivalent to summing the raw low ``in_bits`` fields and adding
+    ``-(num_negative) * 2^{in_bits}``.  Returns the exact sum, computed the
+    hardware's way, for validation against ``operands.sum()``.
+    """
+    operands = operands.astype(jnp.int32)
+    num_neg = jnp.sum(operands < 0, axis=0)
+    low = jnp.sum(jnp.where(operands < 0, operands + (1 << in_bits), operands), axis=0)
+    total = low - (num_neg << in_bits)
+    # wrap to out_bits two's complement (MOA output width)
+    mod = 1 << out_bits
+    wrapped = ((total % mod) + mod) % mod
+    return jnp.where(wrapped >= (mod >> 1), wrapped - mod, wrapped)
+
+
+# ---------------------------------------------------------------------------
+# Float-weight quantization (per-channel symmetric) + QAT straight-through.
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PsiQuantized:
+    """A weight tensor in PSI format: integer codes + per-channel scale.
+
+    ``codes`` are *already projected* onto the PSI-representable set, so
+    dequantization is ``codes * scale`` — identical to what the SAM array
+    computes (reconstruct-by-shifts), see DESIGN.md §2.
+    """
+    codes: jnp.ndarray   # int8, PSI-representable values
+    scale: jnp.ndarray   # f32, broadcastable to codes.shape
+    bits: int            # 5 or 8
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        return (self.codes.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+def _qmax(bits: int) -> int:
+    return INT5_MAX if bits == 5 else INT8_MAX
+
+
+def compute_scale(w: jnp.ndarray, bits: int, axis) -> jnp.ndarray:
+    """Symmetric per-channel scale: max|w| along ``axis`` maps to qmax."""
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / _qmax(bits)
+
+
+def quantize_weights(w: jnp.ndarray, bits: int, axis=None) -> PsiQuantized:
+    """Quantize float weights to PSI format.
+
+    ``axis`` is the reduction axis/axes for the per-channel scale (None = per
+    tensor).  The integer grid point is projected onto the PSI set, so the
+    stored code is bit-identical to what the TMA hardware would compute with.
+    """
+    if bits not in (5, 8):
+        raise ValueError(f"PSI supports INT5/INT8 weights, got {bits}")
+    scale = compute_scale(w, bits, axis)
+    q = jnp.clip(jnp.round(w / scale), -_qmax(bits) - 1, _qmax(bits)).astype(jnp.int32)
+    q = psi_project_int(q, bits)
+    return PsiQuantized(q.astype(jnp.int8), scale.astype(jnp.float32), bits)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant_ste(w: jnp.ndarray, bits: int, axis=None) -> jnp.ndarray:
+    """Quantize-dequantize with a straight-through gradient — the QAT op used
+    to reproduce the paper's "trained with the proposed quantization"."""
+    return quantize_weights(w, bits, axis).dequantize(w.dtype)
+
+
+def _fq_fwd(w, bits, axis):
+    return fake_quant_ste(w, bits, axis), None
+
+
+def _fq_bwd(bits, axis, _res, g):
+    return (g,)
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantize_activations_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor INT8 activation quantization (paper §I: 8-bit
+    activations).  Used by the bit-faithful reference path."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Sub-byte packing: INT5 codes as 5 bit-planes (exactly 5 bits/weight in HBM).
+# ---------------------------------------------------------------------------
+def pack_int5(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack INT5 codes (..., K, N) -> uint8 bit-planes (..., 5, K//8, N).
+
+    Bit ``b`` of weight ``codes[..., i*8 + j, n] + 16`` (offset-binary) is
+    stored at bit ``j`` of ``packed[..., b, i, n]``.  K must be divisible by 8.
+    Exactly 0.625 bytes per weight — the HBM footprint the psi_matmul kernel
+    reads.
+    """
+    *lead, K, N = codes.shape
+    if K % 8:
+        raise ValueError(f"K={K} must be divisible by 8 for int5 packing")
+    offs = (codes.astype(jnp.int32) + 16).astype(jnp.uint8)  # 0..31
+    offs = offs.reshape(*lead, K // 8, 8, N)
+    lane = jnp.arange(8, dtype=jnp.uint8).reshape(8, 1)
+    planes = []
+    for b in range(5):
+        bit = (offs >> b) & 1                      # (..., K//8, 8, N)
+        plane = jnp.sum(bit.astype(jnp.uint32) << lane.astype(jnp.uint32), axis=-2)
+        planes.append(plane.astype(jnp.uint8))    # (..., K//8, N)
+    return jnp.stack(planes, axis=-3)              # (..., 5, K//8, N)
+
+
+def unpack_int5(packed: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int5`: (..., 5, K//8, N) uint8 -> (..., K, N) int8.
+
+    The reconstruction is a literal sum-of-shifts (``bit << b``) — the software
+    mirror of the SAM barrel shifters.
+    """
+    *lead, five, Kb, N = packed.shape
+    assert five == 5
+    lane = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    val = jnp.zeros((*lead, Kb, 8, N), dtype=jnp.int32)
+    for b in range(5):
+        plane = packed[..., b, :, :][..., :, None, :]          # (..., K//8, 1, N)
+        bit = (plane >> lane) & jnp.uint8(1)
+        val = val + (bit.astype(jnp.int32) << b)
+    codes = val.reshape(*lead, Kb * 8, N) - 16
+    return codes.astype(jnp.int8)
+
+
+def packed_bytes_per_weight(bits: int) -> float:
+    """HBM bytes per weight in serving format (the roofline 'memory' input)."""
+    return 0.625 if bits == 5 else 1.0

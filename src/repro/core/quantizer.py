@@ -1,0 +1,131 @@
+"""Model-level PSI quantization: walk a parameter pytree and convert matmul
+weights into PSI serving format (codes + per-channel scale, optionally packed
+sub-byte planes for INT5).
+
+This is the software analogue of the paper's flow (Fig. 6): weights live in
+DRAM/SRAM in compact integer form and the Weight-decomposition block expands
+them on the way into the compute array.  Here the "compute array" is the
+psi_matmul Pallas kernel which expands codes inside VMEM.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import psi
+
+# Only leaves whose terminal name matches this include-list are quantized:
+# GEMM weights and embedding tables.  Everything else (norm scales, biases —
+# including biases that become 2-D when layer-stacked for scan — the mamba
+# a_log dynamics matrix, depthwise conv mixers, and the MoE router, whose
+# quantization flips top-k routing decisions for negligible storage gain)
+# passes through in full precision.  See DESIGN.md §2.
+WEIGHT_NAMES = (
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "w_out",
+    "w_in_rec", "w_in_gate", "rglru_wa", "rglru_wx",
+    "in_proj", "x_proj", "dt_proj_w", "out_proj",
+    "embed", "lm_head", "convk", "w",
+)
+_INCLUDE_RE = re.compile(r"(^|/)(%s)$" % "|".join(WEIGHT_NAMES))
+
+DEFAULT_EXCLUDE = (
+    r"a_log",        # mamba state matrix (parameterizes dynamics, not a GEMM)
+    r"conv1d",       # mamba / rg-lru short conv (depthwise, tiny)
+    r"norm",
+    r"bias",
+    r"router",       # tiny; quantizing it flips top-k routing
+)
+
+QUANT_MODES = ("none", "qat5", "qat8", "psi5", "psi8")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def is_quantizable(path: str, leaf: Any) -> bool:
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    if not _INCLUDE_RE.search(path):
+        return False
+    return not any(re.search(p, path) for p in DEFAULT_EXCLUDE)
+
+
+def _scale_axis(path: str, leaf) -> tuple:
+    # Embedding tables: per-row scales (quality: each token row independent).
+    if re.search(r"embed", path):
+        return (leaf.ndim - 1,)
+    # CNN kernels (H, W, I, O): per-output-channel over all spatial+input dims.
+    if re.search(r"convk", path):
+        return tuple(range(leaf.ndim - 1))
+    # GEMM weights: reduce ONLY the contraction dim (second-to-last), so
+    # layer-stacked (L, K, N) and per-expert (L, E, d, f) tensors keep
+    # per-layer / per-expert scales with matching leading axes (scan-safe).
+    return (leaf.ndim - 2,)
+
+
+def quantize_param_tree(
+    params: Dict,
+    bits: int,
+    pack: bool = False,
+    exclude: Optional[tuple] = None,
+) -> Dict:
+    """Return a new tree where quantizable leaves become serving-format dicts.
+
+    * ``{"codes": int8, "scale": f32}``             (bits=8, or bits=5 unpacked)
+    * ``{"planes": uint8 (...,5,K//8,N), "scale"}``  (bits=5, pack=True)
+
+    Non-quantizable leaves pass through unchanged.
+    """
+    exclude = DEFAULT_EXCLUDE if exclude is None else exclude
+
+    def convert(path, leaf):
+        p = _path_str(path)
+        if not is_quantizable(p, leaf):
+            return leaf
+        q = psi.quantize_weights(leaf, bits, axis=_scale_axis(p, leaf))
+        if (pack and bits == 5 and leaf.ndim >= 2
+                and leaf.shape[-2] % 8 == 0 and not re.search(r"embed", p)):
+            return {"planes": psi.pack_int5(q.codes), "scale": q.scale}
+        return {"codes": q.codes, "scale": q.scale}
+
+    return jax.tree_util.tree_map_with_path(convert, params)
+
+
+def dequantize_leaf(leaf: Any, dtype=jnp.bfloat16):
+    """Expand one serving-format leaf back to a dense float array."""
+    if isinstance(leaf, dict) and "planes" in leaf:
+        codes = psi.unpack_int5(leaf["planes"])
+        return (codes.astype(jnp.float32) * leaf["scale"]).astype(dtype)
+    if isinstance(leaf, dict) and "codes" in leaf:
+        return (leaf["codes"].astype(jnp.float32) * leaf["scale"]).astype(dtype)
+    return leaf
+
+
+def fake_quant_param_tree(params: Dict, bits: int, exclude: Optional[tuple] = None) -> Dict:
+    """QAT forward transform: quantize-dequantize every quantizable leaf with a
+    straight-through gradient.  Apply inside the loss so dLoss/dw flows to the
+    latent float weights (paper: networks are *trained with* the quantization).
+    """
+    exclude = DEFAULT_EXCLUDE if exclude is None else exclude
+
+    def convert(path, leaf):
+        p = _path_str(path)
+        if not is_quantizable(p, leaf):
+            return leaf
+        return psi.fake_quant_ste(leaf, bits, _scale_axis(p, leaf))
+
+    return jax.tree_util.tree_map_with_path(convert, params)
+
+
+def quantized_bytes(params: Dict) -> int:
+    """Total serving-format bytes (for EXPERIMENTS.md compression reporting)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

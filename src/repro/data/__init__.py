@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenStream, make_batch_for  # noqa: F401

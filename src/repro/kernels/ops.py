@@ -1,0 +1,48 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+On TPU the Pallas kernel runs natively; on CPU (this container) the pure-jnp
+oracle executes instead — identical semantics (tests assert allclose between
+the interpret-mode kernel and the oracle).  Set ``REPRO_FORCE_INTERPRET=1`` to
+route through ``pallas_call(interpret=True)`` on CPU (used by kernel tests).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import psi_matmul as _pk
+from repro.kernels import ref as _ref
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _force_interpret() -> bool:
+    return os.environ.get("REPRO_FORCE_INTERPRET", "0") == "1"
+
+
+def psi_matmul_2d(x2d: jnp.ndarray, wleaf: dict) -> jnp.ndarray:
+    """(M, K) x serving-format weight dict -> (M, N)."""
+    scale = wleaf["scale"].reshape(-1)
+    if "planes" in wleaf:
+        if _use_pallas():
+            return _pk.psi_matmul_int5(x2d, wleaf["planes"], scale)
+        if _force_interpret():
+            return _pk.psi_matmul_int5(x2d, wleaf["planes"], scale, interpret=True)
+        return _ref.psi_matmul_int5_ref(x2d, wleaf["planes"], scale)
+    if _use_pallas():
+        return _pk.psi_matmul_int8(x2d, wleaf["codes"], scale)
+    if _force_interpret():
+        return _pk.psi_matmul_int8(x2d, wleaf["codes"], scale, interpret=True)
+    return _ref.psi_matmul_int8_ref(x2d, wleaf["codes"], scale)
+
+
+def psi_matmul(x: jnp.ndarray, wleaf: dict) -> jnp.ndarray:
+    """(..., K) x serving-format weight -> (..., N); flattens leading dims."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    y = psi_matmul_2d(x.reshape(-1, K), wleaf)
+    return y.reshape(*lead, y.shape[-1])

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the exact semantics the kernels must match (asserted in
+tests/test_kernels.py across shape/dtype sweeps) and serve as the CPU
+execution path of ``repro.kernels.ops``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import psi
+
+
+def psi_matmul_int8_ref(x: jnp.ndarray, codes: jnp.ndarray,
+                        scale: jnp.ndarray) -> jnp.ndarray:
+    """x (..., K) @ dequant(codes (K, N), scale (1, N) or (N,)) -> (..., N).
+
+    Accumulates in f32 (MXU-accurate), applies the per-output-channel scale
+    after the reduction — bit-matching the kernel's epilogue.
+    """
+    acc = jnp.einsum("...k,kn->...n", x.astype(jnp.float32),
+                     codes.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return (acc * scale.reshape(1, -1)).astype(x.dtype)
+
+
+def psi_matmul_int5_ref(x: jnp.ndarray, planes: jnp.ndarray,
+                        scale: jnp.ndarray) -> jnp.ndarray:
+    """x (..., K) @ dequant(planes (5, K//8, N), scale) -> (..., N).
+
+    The bit-plane unpack (sum of shifted bits − 16) is the software mirror of
+    the SAM barrel-shift reconstruction (paper Fig. 2 / DESIGN.md §2).
+    """
+    codes = psi.unpack_int5(planes)
+    return psi_matmul_int8_ref(x, codes, scale)

@@ -1,0 +1,354 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: for every (architecture x input shape x mesh) cell,
+``jit(step).lower(input_specs).compile()`` must succeed on the production
+mesh; the compiled artifact yields the roofline terms (EXPERIMENTS.md).
+
+The two lines above run before any other import — jax locks the device count
+at first backend init, and the dry-run needs 512 placeholder CPU devices.
+Nothing here allocates device memory: all inputs are ShapeDtypeStructs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/
+  ... --multi-pod            # (2,16,16) pod mesh instead of (16,16)
+  ... --quant psi8|psi5|none # serving weight format (default psi8)
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable, ASSIGNED_ARCHS
+from repro.core import quantizer as qz
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.optim import adamw, cosine_schedule
+from repro.runtime import sharding as shr
+
+# TPU v5e hardware constants live in repro.perf.roofline_model (importable
+# without touching this module's device-count env flag).
+from repro.perf.roofline_model import PEAK_FLOPS, HBM_BW, ICI_BW  # noqa: E402
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins; no allocation).
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: _sds(x.shape, x.dtype) if hasattr(x, "shape") else x, tree)
+
+
+def abstract_params(model, quant: str):
+    """Parameter ShapeDtypeStructs via eval_shape — no real init at scale."""
+    cfg = model.cfg
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    dt = jnp.dtype(cfg.dtype)
+    params = jax.tree_util.tree_map(
+        lambda s: _sds(s.shape, dt if jnp.issubdtype(s.dtype, jnp.floating)
+                       else s.dtype), params)
+    if quant in ("psi8", "psi5"):
+        bits = 8 if quant == "psi8" else 5
+        params = jax.eval_shape(
+            lambda p: qz.quantize_param_tree(p, bits, pack=(bits == 5)), params)
+    return params
+
+
+def input_specs(arch: str, shape_name: str, quant: str = "psi8",
+                kv_quant: str = ""):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch, **({"kv_quant": kv_quant} if kv_quant else {}))
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((B, cfg.vision_patches, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+            batch["positions"] = _sds((B, 3, S), jnp.int32)
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, cfg.enc_frames, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    batch = {"token": _sds((B, 1), jnp.int32)}
+    if cfg.rope == "mrope":
+        batch["positions"] = _sds((B, 3, 1), jnp.int32)
+    else:
+        batch["pos"] = _sds((B, 1), jnp.int32)
+    model = build_model(cfg)
+    cache = jax.eval_shape(
+        lambda: model.init_cache(B, S, jnp.dtype(cfg.dtype)))
+    return {"batch": batch, "cache": abstract_tree(cache)}
+
+
+# --------------------------------------------------------------------------
+# Step functions.
+# --------------------------------------------------------------------------
+def build_step(arch: str, shape_name: str, quant: str, mesh,
+               kv_quant: str = ""):
+    """Returns (fn, example_args(abstract), in_shardings, out_shardings,
+    static cfg info)."""
+    shape = SHAPES[shape_name]
+    serve_quant = quant if shape.kind != "train" else "none"
+    overrides = {"quant_mode": serve_quant if shape.kind != "train" else "none"}
+    if kv_quant and shape.kind == "decode":
+        overrides["kv_quant"] = kv_quant
+    base_cfg = get_config(arch)
+    if shr.tp_enabled(base_cfg):
+        overrides["act_batch_axes"] = tuple(
+            a for a in shr.DP_AXES if a in mesh.axis_names)
+        if shape.kind != "decode":
+            # Megatron-style sequence sharding of the residual stream
+            overrides["act_seq_axis"] = "model"
+        if base_cfg.n_experts and base_cfg.n_experts % mesh.shape["model"] == 0:
+            overrides["moe_expert_axis"] = "model"
+    cfg = get_config(arch, **overrides)
+    model = build_model(cfg)
+    params = abstract_params(model, serve_quant if shape.kind != "train" else "none")
+    pspecs = shr.param_specs(params, cfg, mesh,
+                             mode="train" if shape.kind == "train" else "serve")
+    psh = shr.to_shardings(pspecs, mesh)
+
+    if shape.kind == "train":
+        opt = adamw(lr=cosine_schedule(3e-4, 2000, 100_000))
+        opt_state = jax.eval_shape(opt.init, params)
+        osh = type(opt_state)(
+            step=NamedSharding(mesh, P()),
+            m=shr.to_shardings(pspecs, mesh),
+            v=shr.to_shardings(pspecs, mesh))
+        batch = input_specs(arch, shape_name)
+        bsh = shr.to_shardings(shr.batch_specs(cfg, mesh, batch), mesh)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                loss, met = model.loss(p, batch)
+                return loss, met
+            (loss, met), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            new_p, new_s, om = opt.update(grads, opt_state, params)
+            return new_p, new_s, {"loss": loss, **met, **om}
+
+        return (train_step, (params, opt_state, batch),
+                (psh, osh, bsh), (psh, osh, None))
+
+    def _logits_sharding(B):
+        bax = None
+        for cand in (tuple(a for a in shr.DP_AXES if a in mesh.axis_names),
+                     ("data",)):
+            size = int(np.prod([mesh.shape[a] for a in cand]))
+            if B % size == 0:
+                bax = cand
+                break
+        vax = ("model" if shr.tp_enabled(cfg)
+               and cfg.vocab_size % mesh.shape["model"] == 0 else None)
+        return NamedSharding(mesh, P(bax, vax))
+
+    if shape.kind == "prefill":
+        batch = input_specs(arch, shape_name, quant)
+        bsh = shr.to_shardings(shr.batch_specs(cfg, mesh, batch), mesh)
+        cache_shape = jax.eval_shape(
+            lambda p, b: model.prefill(p, b)[1], params, batch)
+        csh = shr.to_shardings(shr.cache_specs(cfg, mesh, cache_shape["kv"]), mesh)
+        logits_sh = _logits_sharding(shape.global_batch)
+        out_sh = (logits_sh, {"kv": csh, **({"enc_out": NamedSharding(mesh, P())}
+                                            if cfg.family == "encdec" else {})})
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+
+        return prefill_step, (params, batch), (psh, bsh), out_sh
+
+    # decode
+    spec = input_specs(arch, shape_name, quant, kv_quant=kv_quant)
+    batch, cache = spec["batch"], spec["cache"]
+    bsh = shr.to_shardings(shr.batch_specs(cfg, mesh, batch), mesh)
+    csh_kv = shr.to_shardings(shr.cache_specs(cfg, mesh, cache["kv"]), mesh)
+    csh = {"kv": csh_kv}
+    if "enc_out" in cache:
+        csh["enc_out"] = NamedSharding(
+            mesh, shr.cache_specs(cfg, mesh, {"enc_out": cache["enc_out"]})["enc_out"])
+    logits_sh = _logits_sharding(shape.global_batch)
+
+    def decode_step(params, batch, cache):
+        return model.decode_step(params, batch, cache)
+
+    return decode_step, (params, batch, cache), (psh, bsh, csh), (logits_sh, csh)
+
+
+# --------------------------------------------------------------------------
+# HLO collective-byte accounting.
+# --------------------------------------------------------------------------
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_per_device(hlo_text: str):
+    """Sum result-shape bytes of every collective in the SPMD-partitioned
+    module (shapes there are per-device)."""
+    per_op = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, opname = m.group(1), m.group(2)
+        per_op[opname] = per_op.get(opname, 0) + _shape_bytes(shape_txt)
+    return sum(per_op.values()), per_op
+
+
+# --------------------------------------------------------------------------
+# Roofline.
+# --------------------------------------------------------------------------
+def model_flops(cfg, shape) -> float:
+    """Standard useful-FLOPs yardstick: 6*N*D train, 2*N*D inference
+    (N = active non-embedding params, D = tokens processed)."""
+    n = cfg.active_param_count() - cfg.vocab_size * cfg.d_model
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant: str = "psi8", kv_quant: str = "", verbose: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    with mesh:
+        # build_step traces eval_shape through models that carry
+        # with_sharding_constraint — needs the mesh in context
+        fn, args, in_sh, out_sh = build_step(arch, shape_name, quant, mesh,
+                                             kv_quant=kv_quant)
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_dev, coll_ops = collective_bytes_per_device(hlo)
+
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    bytes_acc = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+
+    # Roofline terms come from the analytic model (exact per-layer counts x
+    # trip counts); cost_analysis counts lax.while bodies ONCE and is kept
+    # only as a diagnostic (see repro/perf/roofline_model.py + tests).
+    from repro.perf.roofline_model import analytic_cell, roofline_terms
+    an_quant = quant if shape.kind != "train" else "none"
+    cell = analytic_cell(arch, shape_name, quant=an_quant, chips=chips,
+                         mesh_model=mesh.shape.get("model", 1),
+                         kv_quant=kv_quant)
+    rt = roofline_terms(cell, chips=chips)
+    mf = model_flops(cfg, shape)
+    mem_dev = (getattr(mem, "temp_size_in_bytes", 0)
+               + getattr(mem, "argument_size_in_bytes", 0))
+    result = {
+        "arch": arch, "shape": shape_name, "quant": quant,
+        "kv_quant": kv_quant,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        # analytic roofline (authoritative)
+        **rt,
+        "flops_per_dev": cell.flops / chips,
+        "hbm_bytes_per_dev": cell.hbm_bytes / chips,
+        "coll_bytes_per_dev_analytic": cell.coll_bytes_per_dev,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(cell.flops, 1.0),
+        # compiled-artifact diagnostics (scan bodies counted once)
+        "hlo_flops_per_dev_once": flops,
+        "hlo_bytes_per_dev_once": bytes_acc,
+        "hlo_collective_bytes_per_dev_once": coll_dev,
+        "collective_breakdown": coll_ops,
+        "memory_per_device_bytes": mem_dev,
+        "fits_hbm_16g": bool(mem_dev < 16e9),
+        "memory_analysis": {
+            k: getattr(mem, k) for k in
+            ("temp_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)},
+    }
+    if verbose:
+        print(json.dumps(result, indent=1, default=float))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default="psi8",
+                    choices=["none", "psi5", "psi8"])
+    ap.add_argument("--kv-quant", default="", choices=["", "int8"])
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all) required")
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        try:
+            results.append(run_cell(arch, shape, multi_pod=args.multi_pod,
+                                    quant=args.quant,
+                                    kv_quant=args.kv_quant))
+        except Exception as e:  # a failing cell is a bug: surface loudly
+            results.append({"arch": arch, "shape": shape,
+                            "error": f"{type(e).__name__}: {e}"})
+            print(f"FAIL {arch} x {shape}: {e}", file=sys.stderr)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    fails = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(fails)}/{len(results)} cells passed")
+    sys.exit(1 if fails else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): (16, 16) = 256 chips per pod, data x model; multi-pod adds
+the leading "pod" axis (2 pods = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh over the first prod(shape) devices (tests, elastic)."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)

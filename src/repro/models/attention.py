@@ -1,0 +1,240 @@
+"""Attention: MHA/GQA/MQA, causal + sliding-window masking, qk-norm, RoPE
+variants, chunked (memory-bounded) prefill, ring-buffer KV cache for decode.
+
+Memory discipline: prefill/train never materializes the full (S, S) score
+matrix — queries are processed in chunks of ``Q_CHUNK`` via ``lax.scan`` so
+the peak live score tensor is (B, H, Q_CHUNK, S) regardless of sequence
+length (this is what makes the 32k-prefill cells fit HBM; see EXPERIMENTS.md
+§Dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.quant import linear
+
+Q_CHUNK = 512
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params.
+# ---------------------------------------------------------------------------
+def init_attention(cfg, key, cross=False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, hq * hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (hq * hd, d), jnp.float32) * (hq * hd) ** -0.5,
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm_scale"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm_scale"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core grouped scaled-dot-product with masking.
+# ---------------------------------------------------------------------------
+def _grouped_scores(q, k):
+    """q (B, Sq, Hq, D), k (B, Skv, Hkv, D) -> (B, Hq, Sq, Skv) f32."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(B, Hq, Sq, k.shape[1]) * (D ** -0.5)
+
+
+def _weighted_values(probs, v, Hq):
+    """probs (B, Hq, Sq, Skv) f32, v (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    B, _, Sq, Skv = probs.shape
+    Hkv, D = v.shape[2], v.shape[3]
+    G = Hq // Hkv
+    pg = probs.reshape(B, Hkv, G, Sq, Skv)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pg.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, Hq, D).astype(v.dtype)
+
+
+def _mask(q_pos, k_pos, causal, window):
+    """(…, Sq, Skv) boolean validity mask from absolute positions."""
+    # k_pos == -1 marks empty ring-buffer slots -> always invalid.
+    m = jnp.broadcast_to(k_pos[..., None, :] >= 0,
+                         q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]))
+    if causal:
+        m &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def sdpa(q, k, v, q_pos, k_pos, *, causal=True, window=0, q_chunk=Q_CHUNK):
+    """Chunked attention.  q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D);
+    q_pos (B,Sq), k_pos (B,Skv) absolute positions (drive causal/window
+    masks — works for packed, shifted, or ring-buffer layouts alike)."""
+    B, Sq, Hq, D = q.shape
+
+    def attend(q_c, qp_c):
+        s = _grouped_scores(q_c, k)                               # (B,Hq,c,Skv)
+        m = _mask(qp_c, k_pos, causal, window)[:, None]
+        s = jnp.where(m, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return _weighted_values(p, v, Hq)
+
+    if Sq <= q_chunk:
+        return attend(q, q_pos)
+
+    # Pad queries to a chunk multiple (e.g. whisper's 1500-frame encoder);
+    # padded rows attend uniformly (no mask hazard) and are sliced away.
+    pad = (-Sq) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+    Sp = Sq + pad
+    n = Sp // q_chunk
+    qs = q.reshape(B, n, q_chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+
+    # checkpoint each chunk: backward recomputes scores/probs per chunk
+    # instead of saving (n_chunks, B, H, chunk, Skv) f32 residuals.
+    attend_ckpt = jax.checkpoint(attend)
+
+    def step(_, xs):
+        q_c, qp_c = xs
+        return None, attend_ckpt(q_c, qp_c)
+
+    _, outs = jax.lax.scan(step, None, (qs, ps))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, Hq, D)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# Block-level apply: prefill/train and single-token decode.
+# ---------------------------------------------------------------------------
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    qm = cfg.quant_mode
+    q = linear(p["wq"], x, qm).reshape(B, S, hq, hd)
+    k = linear(p["wk"], x, qm).reshape(B, S, hkv, hd)
+    v = linear(p["wv"], x, qm).reshape(B, S, hkv, hd)
+    if "q_norm_scale" in p:
+        q = layers.rms_head_norm(p["q_norm_scale"], q, cfg.norm_eps)
+        k = layers.rms_head_norm(p["k_norm_scale"], k, cfg.norm_eps)
+    q = layers.apply_rope(q, positions, cfg)
+    k = layers.apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def attention_block(p, x, cfg, positions, *, causal=True):
+    """Training / prefill self-attention.  Returns (y, (k, v, k_pos))."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    pos1d = positions[:, 0] if positions.ndim == 3 else positions
+    window = cfg.window if cfg.attn_type == "swa" else 0
+    o = sdpa(q, k, v, pos1d, pos1d, causal=causal, window=window)
+    B, S = x.shape[:2]
+    y = linear(p["wo"], o.reshape(B, S, -1), cfg.quant_mode)
+    return y, (k, v, pos1d)
+
+
+def _kv_quantize(t):
+    """(…, D) bf16 -> int8 codes + per-entry scale (…, 1) f32."""
+    amax = jnp.maximum(jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1,
+                               keepdims=True), 1e-8)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def _kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def decode_attention_block(p, x, cfg, positions, cache):
+    """Single-token decode with a (ring-buffer when windowed) KV cache.
+
+    cache: {"k","v": (B, C, Hkv, D), "k_pos": (B, C) int32 (-1 = empty)}
+    — with cfg.kv_quant == "int8", k/v are int8 codes plus per-entry
+    "k_scale"/"v_scale" (B, C, Hkv, 1) f32: halves the decode-dominant
+    HBM read (beyond-paper; EXPERIMENTS.md §Perf).
+    ``positions`` is the absolute position of the new token, (B, 1) (or
+    (B, 3, 1) for mrope).  Returns (y, new_cache).
+    """
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    pos1d = positions[:, 0] if positions.ndim == 3 else positions   # (B,1)
+    C = cache["k"].shape[1]
+    slot = pos1d[:, 0] % C                                          # ring slot
+    bidx = jnp.arange(x.shape[0])
+    k_pos = cache["k_pos"].at[bidx, slot].set(pos1d[:, 0])
+    if "k_scale" in cache:
+        kq, ks = _kv_quantize(k_new[:, 0])
+        vq, vs = _kv_quantize(v_new[:, 0])
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(kq),
+            "v": cache["v"].at[bidx, slot].set(vq),
+            "k_scale": cache["k_scale"].at[bidx, slot].set(ks),
+            "v_scale": cache["v_scale"].at[bidx, slot].set(vs),
+            "k_pos": k_pos,
+        }
+        k = _kv_dequantize(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v = _kv_dequantize(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
+            "v": cache["v"].at[bidx, slot].set(v_new[:, 0]),
+            "k_pos": k_pos,
+        }
+        k, v = new_cache["k"], new_cache["v"]
+    window = cfg.window if cfg.attn_type == "swa" else 0
+    o = sdpa(q, k, v, pos1d, k_pos, causal=True, window=window)
+    y = linear(p["wo"], o.reshape(x.shape[0], 1, -1), cfg.quant_mode)
+    return y, new_cache
+
+
+def init_kv_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
+    """Cache extent: full seq for dense attention, window for SWA/local
+    (bounded state is what qualifies an arch for long_500k; DESIGN.md §4)."""
+    C = min(seq_len, cfg.window) if (cfg.attn_type == "swa" and cfg.window) else seq_len
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    cache = {
+        "k_pos": -jnp.ones((batch, C), jnp.int32),
+    }
+    if cfg.kv_quant == "int8":
+        cache["k"] = jnp.zeros((batch, C, hkv, hd), jnp.int8)
+        cache["v"] = jnp.zeros((batch, C, hkv, hd), jnp.int8)
+        cache["k_scale"] = jnp.zeros((batch, C, hkv, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, C, hkv, 1), jnp.float32)
+    else:
+        cache["k"] = jnp.zeros((batch, C, hkv, hd), dtype)
+        cache["v"] = jnp.zeros((batch, C, hkv, hd), dtype)
+    return cache
+
+
+def cross_attention_block(p, x, cfg, enc_kv):
+    """Encoder-decoder cross attention (whisper).  enc_kv = (k, v) from the
+    encoder output; no positional rotation, no mask (full visibility)."""
+    B, S, _ = x.shape
+    hd, hq = cfg.resolved_head_dim, cfg.n_heads
+    q = linear(p["wq"], x, cfg.quant_mode).reshape(B, S, hq, hd)
+    k, v = enc_kv
+    Skv = k.shape[1]
+    qp = jnp.zeros((B, S), jnp.int32)
+    kp = jnp.zeros((B, Skv), jnp.int32)
+    o = sdpa(q, k, v, qp, kp, causal=False, window=0)
+    return linear(p["wo"], o.reshape(B, S, -1), cfg.quant_mode)
+
+
+def project_enc_kv(p, enc_out, cfg):
+    B, S, _ = enc_out.shape
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    k = linear(p["wk"], enc_out, cfg.quant_mode).reshape(B, S, hkv, hd)
+    v = linear(p["wv"], enc_out, cfg.quant_mode).reshape(B, S, hkv, hd)
+    return k, v

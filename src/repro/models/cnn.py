@@ -1,0 +1,130 @@
+"""AlexNet / LeNet-5 — the paper's benchmark networks (Table I / §III).
+
+Convolution kernels ("convk") and FC weights are PSI-quantizable exactly like
+the LM linears; with ``quant_mode="psi5"/"psi8"`` the forward pass computes
+with PSI-projected integer weights — the bit-faithful counterpart of the TMA
+NE array (whose cycle cost is modeled in ``repro.core.tma_model``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import psi, quantizer
+from repro.quant import linear
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    out_ch: int
+    kernel: int
+    stride: int
+    pad: int
+    pool: int = 1          # max-pool window (1 = none)
+    groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    in_shape: Tuple[int, int, int]         # (H, W, C)
+    convs: Tuple[ConvSpec, ...]
+    fcs: Tuple[int, ...]
+    n_classes: int
+    quant_mode: str = "none"
+
+
+ALEXNET = CNNConfig(
+    name="alexnet", in_shape=(227, 227, 3),
+    convs=(ConvSpec(96, 11, 4, 0, pool=3),
+           ConvSpec(256, 5, 1, 2, pool=3, groups=2),
+           ConvSpec(384, 3, 1, 1),
+           ConvSpec(384, 3, 1, 1, groups=2),
+           ConvSpec(256, 3, 1, 1, pool=3, groups=2)),
+    fcs=(4096, 4096), n_classes=1000)
+
+LENET5 = CNNConfig(
+    name="lenet5", in_shape=(32, 32, 1),
+    convs=(ConvSpec(6, 5, 1, 0, pool=2),
+           ConvSpec(16, 5, 1, 0, pool=2)),
+    fcs=(120, 84), n_classes=10)
+
+
+def init_cnn(cfg: CNNConfig, key) -> dict:
+    params = {}
+    H, W, C = cfg.in_shape
+    keys = jax.random.split(key, len(cfg.convs) + len(cfg.fcs) + 1)
+    for i, cs in enumerate(cfg.convs):
+        fan_in = cs.kernel * cs.kernel * (C // cs.groups)
+        params[f"conv{i}"] = {
+            "convk": jax.random.normal(
+                keys[i], (cs.kernel, cs.kernel, C // cs.groups, cs.out_ch),
+                jnp.float32) * fan_in ** -0.5,
+            "b": jnp.zeros((cs.out_ch,), jnp.float32),
+        }
+        H = (H + 2 * cs.pad - cs.kernel) // cs.stride + 1
+        W = (W + 2 * cs.pad - cs.kernel) // cs.stride + 1
+        if cs.pool > 1:
+            H, W = (H - cs.pool) // 2 + 1, (W - cs.pool) // 2 + 1
+        C = cs.out_ch
+    dim = H * W * C
+    for j, out in enumerate(tuple(cfg.fcs) + (cfg.n_classes,)):
+        k = keys[len(cfg.convs) + j]
+        params[f"fc{j}"] = {
+            "w": jax.random.normal(k, (dim, out), jnp.float32) * dim ** -0.5,
+            "b": jnp.zeros((out,), jnp.float32),
+        }
+        dim = out
+    return params
+
+
+def _maybe_q(w, quant_mode, conv=False):
+    if isinstance(w, dict):
+        return quantizer.dequantize_leaf(w, jnp.float32)
+    bits = {"qat5": 5, "qat8": 8, "psi5": 5, "psi8": 8}.get(quant_mode)
+    if bits is None:
+        return w
+    axis = tuple(range(w.ndim - 1)) if conv else (w.ndim - 2,)
+    return psi.fake_quant_ste(w, bits, axis)
+
+
+def cnn_forward(params: dict, x: jnp.ndarray, cfg: CNNConfig) -> jnp.ndarray:
+    """x (B, H, W, C) -> logits (B, n_classes)."""
+    qm = cfg.quant_mode
+    for i, cs in enumerate(cfg.convs):
+        w = _maybe_q(params[f"conv{i}"]["convk"], qm, conv=True)
+        x = jax.lax.conv_general_dilated(
+            x, w, (cs.stride, cs.stride),
+            [(cs.pad, cs.pad), (cs.pad, cs.pad)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=cs.groups)
+        x = jax.nn.relu(x + params[f"conv{i}"]["b"])
+        if cs.pool > 1:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, cs.pool, cs.pool, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    n_fc = len(cfg.fcs) + 1
+    for j in range(n_fc):
+        w = _maybe_q(params[f"fc{j}"]["w"], qm)
+        x = x @ w + params[f"fc{j}"]["b"]
+        if j < n_fc - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def cnn_loss(params, batch, cfg: CNNConfig):
+    logits = cnn_forward(params, batch["images"], cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+def quantize_cnn(params: dict, bits: int) -> dict:
+    return quantizer.quantize_param_tree(params, bits)

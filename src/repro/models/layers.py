@@ -1,0 +1,141 @@
+"""Shared building blocks: norms, positional encodings (RoPE family), MLPs.
+
+Pure functions over explicit parameter dicts; params are created by the
+``init_*`` companions.  All matmuls route through ``repro.quant.linear`` so
+PSI quantization (QAT or serving) applies uniformly (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import linear
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+def init_norm(cfg, d, key=None):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(p, x, cfg):
+    """f32 statistics, activation-dtype application.
+
+    The f32 copy of x must feed ONLY the reduction (where it fuses away):
+    a shared materialized f32 x lets XLA hoist `convert(saved_activation_
+    stack)` out of the backward scan loop — observed as a +50 % f32 shadow
+    of the remat stack (8.9 GB on granite-34b train)."""
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x.astype(jnp.float32) - mu), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + cfg.norm_eps)
+        y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+        return y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + cfg.norm_eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps):
+    """qk-norm: RMSNorm over the head dim, scale shared across heads."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE family.
+# ---------------------------------------------------------------------------
+def _rope_freqs(dim, theta, dtype=jnp.float32):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=dtype) / dim))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, cfg):
+    """x (B, S, H, D); positions (B, S) int32 — or (B, 3, S) for mrope.
+
+    * "rope":   full-dim NeoX-style rotate-half.
+    * "rope2d": ChatGLM scheme — RoPE on the first half of the head dims,
+      pass-through on the second half.
+    * "mrope":  Qwen2-VL multimodal RoPE — head dims split into 3 sections
+      (t, h, w), each rotated by its own position stream.
+    * "sinusoidal"/"none": handled at the embedding level; identity here.
+    """
+    D = x.shape[-1]
+    if cfg.rope == "rope":
+        freqs = _rope_freqs(D, cfg.rope_theta)
+        ang = positions[..., None].astype(jnp.float32) * freqs      # (B,S,D/2)
+        cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+        return _rotate(x, cos.astype(x.dtype), sin.astype(x.dtype))
+    if cfg.rope == "rope2d":
+        half = D // 2
+        freqs = _rope_freqs(half, cfg.rope_theta)
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+        xr, xp = x[..., :half], x[..., half:]
+        return jnp.concatenate(
+            [_rotate(xr, cos.astype(x.dtype), sin.astype(x.dtype)), xp], axis=-1)
+    if cfg.rope == "mrope":
+        # positions (B, 3, S); sections (t, h, w) split D/2 freqs 2:1:1.
+        freqs = _rope_freqs(D, cfg.rope_theta)                      # (D/2,)
+        nf = freqs.shape[0]
+        s_t, s_h = nf // 2, nf // 4
+        sec = jnp.concatenate([jnp.zeros((s_t,), jnp.int32),
+                               jnp.ones((s_h,), jnp.int32),
+                               2 * jnp.ones((nf - s_t - s_h,), jnp.int32)])
+        pos = positions[:, sec, :].astype(jnp.float32)              # (B,nf,S)
+        ang = pos.transpose(0, 2, 1) * freqs                        # (B,S,nf)
+        cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+        return _rotate(x, cos.astype(x.dtype), sin.astype(x.dtype))
+    return x
+
+
+def sinusoidal_embedding(S, D, offset=0, dtype=jnp.float32):
+    pos = jnp.arange(offset, offset + S, dtype=jnp.float32)[:, None]
+    return sinusoidal_from_positions(pos[None, :, 0], D, dtype)[0]
+
+
+def sinusoidal_from_positions(positions, D, dtype=jnp.float32):
+    """positions (B, S) -> (B, S, D); used by whisper prefill *and* decode
+    (decode passes the absolute token position)."""
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(D // 2, dtype=jnp.float32)
+                    / max(D // 2 - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+def init_mlp(cfg, key, d=None, d_ff=None):
+    d = d or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = d_ff ** -0.5
+    if cfg.act in ("swiglu", "geglu"):
+        return {"w_gate": jax.random.normal(k1, (d, d_ff), jnp.float32) * s_in,
+                "w_up": jax.random.normal(k2, (d, d_ff), jnp.float32) * s_in,
+                "w_down": jax.random.normal(k3, (d_ff, d), jnp.float32) * s_out}
+    return {"w_up": jax.random.normal(k1, (d, d_ff), jnp.float32) * s_in,
+            "w_down": jax.random.normal(k2, (d_ff, d), jnp.float32) * s_out}
+
+
+def apply_mlp(p, x, cfg):
+    qm = cfg.quant_mode
+    if cfg.act in ("swiglu", "geglu"):
+        g = linear(p["w_gate"], x, qm)
+        u = linear(p["w_up"], x, qm)
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        return linear(p["w_down"], act * u, qm)
+    h = linear(p["w_up"], x, qm)
+    return linear(p["w_down"], jax.nn.gelu(h), qm)

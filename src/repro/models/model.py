@@ -1,0 +1,233 @@
+"""Model facade: one object per architecture config exposing
+
+  * ``init(key)``                     -> params
+  * ``loss(params, batch)``           -> (scalar, metrics)   [train_4k]
+  * ``prefill(params, batch)``        -> (logits, cache)     [prefill_32k]
+  * ``decode_step(params, batch)``    -> (logits, new cache) [decode_32k/long_500k]
+  * ``init_cache(batch, seq_len)``    -> cache pytree
+  * ``quantize(params, bits, pack)``  -> PSI serving params (the paper's
+                                         technique as a first-class feature)
+
+``batch`` layouts per family are produced by ``input_specs``/``make_batch`` in
+repro.launch.dryrun / repro.data.pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer
+from repro.models import attention, layers, transformer
+from repro.quant import embed, linear, tied_logits
+
+
+def _lm_positions(B, S, offset=0):
+    return jnp.broadcast_to(jnp.arange(offset, offset + S)[None], (B, S))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: object
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_e, k_s, k_h, k_enc = jax.random.split(key, 4)
+        params = {
+            "embed": jax.random.normal(k_e, (cfg.vocab_size, cfg.d_model),
+                                       jnp.float32) * cfg.d_model ** -0.5,
+            "stack": transformer.init_decoder_stack(cfg, k_s),
+            "norm_f": layers.init_norm(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = jax.random.normal(
+                k_h, (cfg.d_model, cfg.vocab_size), jnp.float32) * cfg.d_model ** -0.5
+        if cfg.family == "encdec":
+            params["encoder"] = transformer.init_encoder_stack(cfg, k_enc)
+            params["enc_norm_f"] = layers.init_norm(cfg, cfg.d_model)
+        return params
+
+    def quantize(self, params, bits: int, pack: bool = False) -> dict:
+        return quantizer.quantize_param_tree(params, bits, pack=pack)
+
+    # -------------------------------------------------------------- embedding
+    def _embed_tokens(self, params, tokens, batch):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = embed(params["embed"], tokens, dtype)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            P = batch["vision_embeds"].shape[1]
+            x = jnp.concatenate(
+                [batch["vision_embeds"].astype(dtype), x[:, P:]], axis=1)
+        if cfg.rope == "sinusoidal":
+            pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None],
+                                   (x.shape[0], x.shape[1]))
+            x = x + layers.sinusoidal_from_positions(pos, cfg.d_model, dtype)
+        return x
+
+    def _positions(self, batch, B, S, offset=0):
+        if "positions" in batch:
+            return batch["positions"]
+        return _lm_positions(B, S, offset)
+
+    def _encode(self, params, batch):
+        """Whisper encoder over precomputed (stub) frame embeddings."""
+        cfg = self.cfg
+        frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        x = frames + layers.sinusoidal_embedding(
+            frames.shape[1], cfg.d_model, dtype=frames.dtype)[None]
+        x = transformer.apply_encoder_stack(params["encoder"], x, cfg)
+        return layers.apply_norm(params["enc_norm_f"], x, cfg)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            return tied_logits(params["embed"], x, cfg.quant_mode)
+        return linear(params["lm_head"], x, cfg.quant_mode)
+
+    # ----------------------------------------------------------- full forward
+    def forward(self, params, batch, collect_cache=False):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc_out = self._encode(params, batch) if cfg.family == "encdec" else None
+        x = self._embed_tokens(params, tokens, batch)
+        positions = self._positions(batch, B, S)
+        x, states, aux = transformer.apply_decoder_stack(
+            params["stack"], x, cfg, positions, enc_kv=enc_out,
+            collect_cache=collect_cache)
+        x = layers.apply_norm(params["norm_f"], x, cfg)
+        logits = self._logits(params, x)
+        return logits, states, aux, enc_out
+
+    def loss(self, params, batch):
+        """Next-token cross-entropy (shift-inside); returns (loss, metrics).
+
+        Sharding note: the gold logit is extracted with a fused one-hot
+        einsum, NOT take_along_axis — a gather along the model-sharded vocab
+        dim makes the SPMD partitioner replicate the batch dim of the f32
+        logits (observed: 5x 40 GB buffers/device at train_4k scale)."""
+        logits, _, aux, _ = self.forward(params, batch)
+        tokens = batch["tokens"]
+        lg = logits[:, :-1]                      # stay bf16: the f32 cast
+        tg = tokens[:, 1:]                       # materializes (B,S,V) f32
+        # max-subtracted logsumexp with f32 ACCUMULATION but bf16 storage —
+        # the convert/exp chain fuses into the reduction.
+        m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+        ex = jnp.exp(lg - m)                 # bf16 storage (backward residual
+        #                                      is (T, V) — f32 doubles it)
+        logz = (jnp.log(jnp.sum(ex, axis=-1, dtype=jnp.float32))
+                + m[..., 0].astype(jnp.float32))
+        # gold logit via bf16 one-hot product (fuses into the reduction).
+        # A/B'd against iota-compare (materializes (B,S,V) s32 buffers) and
+        # vmap'd take_along_axis (+4 GB on the 256k-vocab arch): best-or-tied
+        # on every architecture.
+        oh = jax.nn.one_hot(tg, lg.shape[-1], dtype=lg.dtype)
+        gold = jnp.sum((lg * oh).astype(jnp.float32), axis=-1)
+        mask = jnp.ones_like(tg, jnp.float32)
+        if self.cfg.family == "vlm" and self.cfg.vision_patches:
+            # vision positions carry no next-token target
+            pos = jnp.arange(tg.shape[1])[None]
+            mask = jnp.broadcast_to(pos >= self.cfg.vision_patches - 1,
+                                    tg.shape).astype(jnp.float32)
+        ce = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+        total = ce + aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ---------------------------------------------------------------- serving
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        cache = {"kv": transformer.init_stack_cache(cfg, batch, seq_len, dtype)}
+        if cfg.family == "encdec":
+            cache["enc_out"] = jnp.zeros((batch, cfg.enc_frames, cfg.d_model),
+                                         dtype)
+        return cache
+
+    def prefill(self, params, batch, cache_len=None):
+        """Forward the prompt, return (last-token logits, decode cache)."""
+        cfg = self.cfg
+        S = batch["tokens"].shape[1]
+        cache_len = cache_len or S
+        logits, states, _, enc_out = self.forward(params, batch,
+                                                  collect_cache=True)
+        cache = {"kv": _states_to_cache(cfg, states, S, cache_len)}
+        if cfg.family == "encdec":
+            cache["enc_out"] = enc_out
+        return logits[:, -1], cache
+
+    def decode_step(self, params, batch, cache):
+        """batch: {"token": (B,1), "pos": (B,1) or "positions": (B,3,1)}."""
+        cfg = self.cfg
+        token = batch["token"]
+        B = token.shape[0]
+        x = embed(params["embed"], token, jnp.dtype(cfg.dtype))
+        positions = batch.get("positions", batch.get("pos"))
+        if cfg.rope == "sinusoidal":
+            x = x + layers.sinusoidal_from_positions(
+                positions, cfg.d_model, jnp.dtype(cfg.dtype))
+        enc_out = cache.get("enc_out")
+        x, new_kv = transformer.apply_decoder_stack_decode(
+            params["stack"], x, cfg, positions, cache["kv"], enc_kv=enc_out)
+        x = layers.apply_norm(params["norm_f"], x, cfg)
+        logits = self._logits(params, x)
+        new_cache = dict(cache)
+        new_cache["kv"] = new_kv
+        return logits[:, 0], new_cache
+
+
+def _ring_layout(arr, S, C):
+    """Training-layout (B, S, ...) sequence -> ring-buffer (B, C, ...) cache
+    holding the last min(S, C) entries at slots pos % C.  Positions are the
+    contiguous prefill range [0, S), so the layout is a pad (S <= C) or a
+    roll of the tail window (S > C) — no scatter needed."""
+    if S <= C:
+        pad = [(0, 0), (0, C - S)] + [(0, 0)] * (arr.ndim - 2)
+        return jnp.pad(arr, pad)
+    tail = arr[:, -C:]
+    return jnp.roll(tail, shift=(S - C) % C, axis=1)
+
+
+def _states_to_cache(cfg, states, S, cache_len):
+    g_states, t_states = states
+    group_kinds, _, tail_kinds = transformer._stack_groups(cfg)
+
+    def conv(kind, st, stacked):
+        if st is None:
+            return st
+        if kind in ("attn", "xattn"):
+            C = (min(cache_len, cfg.window)
+                 if (cfg.attn_type == "swa" and cfg.window) else cache_len)
+            def ring(a):
+                return (jax.vmap(lambda x: _ring_layout(x, S, C))(a)
+                        if stacked else _ring_layout(a, S, C))
+            k_pos = st["k_pos"]
+            kp = ring(jnp.where(k_pos >= 0, k_pos, -1)) if S <= C else ring(k_pos)
+            if S < C:  # padded slots must read as empty
+                if stacked:
+                    mask = jnp.arange(C)[None, None] < S
+                else:
+                    mask = jnp.arange(C)[None] < S
+                kp = jnp.where(mask, kp, -1)
+            k_ring, v_ring = ring(st["k"]), ring(st["v"])
+            if cfg.kv_quant == "int8":
+                from repro.models.attention import _kv_quantize
+                kq, ks = _kv_quantize(k_ring)
+                vq, vs = _kv_quantize(v_ring)
+                return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs,
+                        "k_pos": kp}
+            return {"k": k_ring, "v": v_ring, "k_pos": kp}
+        return st  # rec / mamba states are already final
+
+    new_g = {}
+    for i, kind in enumerate(group_kinds):
+        new_g[f"b{i}"] = conv(kind, g_states[f"b{i}"], stacked=True)
+    new_t = [conv(kind, st, stacked=False)
+             for kind, st in zip(tail_kinds, t_states)]
+    return (new_g, new_t)
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (Griffin / recurrentgemma-9b, arXiv:2402.19427).
+
+Block structure (Griffin §2): two parallel branches from the residual stream —
+  branch 1: linear -> GeLU                            (gate)
+  branch 2: linear -> causal conv1d(4) -> RG-LRU      (recurrence)
+merged by elementwise product, then output projection.
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)          input gate
+  a_t = exp(c * softplus(Lambda) * (-r_t))      in (0,1), c = 8
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Like the Mamba block, the recurrence is elementwise in the channel dim, so a
+chunked associative scan runs it with zero cross-device collectives when
+channels are sharded over "model".  PSI quantization applies to the in/out
+and gate projections (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import CHUNK
+from repro.quant import linear
+
+
+def init_rglru(cfg, key):
+    d, dr = cfg.d_model, cfg.resolved_d_rnn
+    cw = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_in_rec": jax.random.normal(ks[0], (d, dr), jnp.float32) * s,
+        "w_in_gate": jax.random.normal(ks[1], (d, dr), jnp.float32) * s,
+        "conv1d_w": jax.random.normal(ks[2], (cw, dr), jnp.float32) * 0.1,
+        "conv1d_b": jnp.zeros((dr,), jnp.float32),
+        "rglru_wa": jax.random.normal(ks[3], (dr, dr), jnp.float32) * dr ** -0.5,
+        "rglru_wx": jax.random.normal(ks[4], (dr, dr), jnp.float32) * dr ** -0.5,
+        "rglru_ba": jnp.zeros((dr,), jnp.float32),
+        "rglru_bx": jnp.zeros((dr,), jnp.float32),
+        "rglru_lambda": jnp.full((dr,), 0.7, jnp.float32),
+        "w_out": jax.random.normal(ks[5], (dr, d), jnp.float32) * dr ** -0.5,
+    }
+
+
+def _conv_causal(p, x, cw):
+    w = p["conv1d_w"]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw)) + p["conv1d_b"]
+
+
+def _gates(p, x, cfg):
+    """a_t (decay) and gated input, both (B, S, dr) f32."""
+    r = jax.nn.sigmoid(linear(p["rglru_wa"], x, cfg.quant_mode)
+                       .astype(jnp.float32) + p["rglru_ba"])
+    i = jax.nn.sigmoid(linear(p["rglru_wx"], x, cfg.quant_mode)
+                       .astype(jnp.float32) + p["rglru_bx"])
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["rglru_lambda"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x.astype(jnp.float32))
+    return a, gated
+
+
+def _scan_chunked(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t over seq; a, b (B, S, dr); h0 (B, dr)."""
+    B, S, dr = a.shape
+    n = max(S // CHUNK, 1)
+    c = S // n
+    a_c = a.reshape(B, n, c, dr).transpose(1, 0, 2, 3)
+    b_c = b.reshape(B, n, c, dr).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def chunk_step(h, xs):
+        # checkpointed — see repro.models.ssm._scan_chunked
+        ac, bc = xs
+        bc0 = bc.at[:, 0].add(ac[:, 0] * h)
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        _, hs = jax.lax.associative_scan(comb, (ac, bc0), axis=1)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    return hs.transpose(1, 0, 2, 3).reshape(B, S, dr), h_last
+
+
+def rglru_block(p, x, cfg, state=None):
+    """Full-sequence recurrent block.  x (B, S, d).
+    Returns (y, {"h": (B,dr), "conv": (B,cw-1,dr)})."""
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(linear(p["w_in_gate"], x, cfg.quant_mode))
+    xr = linear(p["w_in_rec"], x, cfg.quant_mode)
+    conv_tail = xr[:, -(cfg.ssm_conv - 1):, :].astype(jnp.float32)
+    xr = _conv_causal(p, xr, cfg.ssm_conv).astype(x.dtype)
+    a, b = _gates(p, xr, cfg)
+    h0 = jnp.zeros((B, a.shape[-1]), jnp.float32) if state is None else state["h"]
+    hs, h_last = _scan_chunked(a, b, h0)
+    y = hs.astype(x.dtype) * gate
+    out = linear(p["w_out"], y, cfg.quant_mode)
+    return out, {"h": h_last, "conv": conv_tail}
+
+
+def init_rglru_state(cfg, batch):
+    dr = cfg.resolved_d_rnn
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, dr), jnp.float32)}
+
+
+def rglru_decode_step(p, x, cfg, state):
+    """One-token update.  x (B, 1, d)."""
+    gate = jax.nn.gelu(linear(p["w_in_gate"], x, cfg.quant_mode))  # (B,1,dr)
+    xr = linear(p["w_in_rec"], x, cfg.quant_mode)
+    conv_buf = jnp.concatenate([state["conv"], xr.astype(jnp.float32)], axis=1)
+    w = p["conv1d_w"]
+    xc = (jnp.einsum("bcd,cd->bd", conv_buf, w) + p["conv1d_b"])[:, None, :]
+    a, b = _gates(p, xc.astype(x.dtype), cfg)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = h[:, None, :].astype(x.dtype) * gate
+    out = linear(p["w_out"], y, cfg.quant_mode)
+    return out, {"h": h, "conv": conv_buf[:, 1:, :]}

@@ -1,0 +1,134 @@
+"""Mamba-1 selective-state-space block (falcon-mamba-7b).
+
+Parallel (train/prefill) mode uses a chunked associative scan: the sequence is
+split into chunks; within a chunk ``jax.lax.associative_scan`` runs the linear
+recurrence in O(log chunk) depth, and a tiny sequential ``lax.scan`` carries
+the (B, d_inner, N) state across chunks.  Peak live state tensor is
+(B, chunk, d_inner, N) — with d_inner sharded over the "model" mesh axis the
+recurrence is fully elementwise in d, so this layer needs **zero collectives**
+(the roofline table shows it; DESIGN.md §5).
+
+Decode mode is the O(1) recurrent update on carried (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import linear
+
+CHUNK = 256
+
+
+def init_mamba(cfg, key):
+    d, di = cfg.d_model, cfg.d_inner
+    r, N, cw = cfg.resolved_dt_rank, cfg.ssm_state, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * di), jnp.float32) * s,
+        "conv1d_w": jax.random.normal(ks[1], (cw, di), jnp.float32) * 0.1,
+        "conv1d_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": jax.random.normal(ks[2], (di, r + 2 * N), jnp.float32) * di ** -0.5,
+        "dt_proj_w": jax.random.normal(ks[3], (r, di), jnp.float32) * r ** -0.5,
+        "dt_proj_b": jnp.log(jnp.exp(
+            jax.random.uniform(ks[4], (di,), jnp.float32, 1e-3, 1e-1)) - 1 + 1e-9),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": jax.random.normal(ks[5], (di, d), jnp.float32) * di ** -0.5,
+    }
+
+
+def _ssm_inputs(p, xz, cfg):
+    """Common pre-scan computation.  xz (B, S, di) post-conv activations.
+    Returns dA (B,S,di,N), dBx (B,S,di,N), C (B,S,N)."""
+    N = cfg.ssm_state
+    r = cfg.resolved_dt_rank
+    dbl = linear(p["x_proj"], xz, cfg.quant_mode)                  # (B,S,r+2N)
+    dt, Bm, Cm = jnp.split(dbl, [r, r + N], axis=-1)
+    dt = linear(p["dt_proj_w"], dt, cfg.quant_mode) + p["dt_proj_b"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))                   # (B,S,di)
+    A = -jnp.exp(p["a_log"])                                       # (di,N)
+    dA = jnp.exp(dt[..., None] * A)                                # (B,S,di,N)
+    dBx = (dt * xz.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+    return dA, dBx, Cm.astype(jnp.float32)
+
+
+def _conv_causal(p, x, cfg):
+    """Depthwise causal conv1d over seq.  x (B, S, di)."""
+    cw = cfg.ssm_conv
+    w = p["conv1d_w"]                                              # (cw, di)
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw))
+    return y + p["conv1d_b"]
+
+
+def mamba_block(p, x, cfg, ssm_state=None, conv_state=None):
+    """Full-sequence (train/prefill) mamba block.  x (B, S, d).
+    Returns (y, (ssm_state, conv_state)) — final states for decode handoff.
+
+    The selective scan is chunked AND the per-step inputs (dt, B, C, dA,
+    dBx) are computed *inside* each checkpointed chunk: only the (B, S, di)
+    post-conv activations cross the chunk boundary, so no (B, S, di, N) f32
+    tensor is ever live (the full-seq formulation held several: tens of
+    GB/device at train_4k scale)."""
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    xz = linear(p["in_proj"], x, cfg.quant_mode)                   # (B,S,2di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    # last (cw-1) pre-conv activations: decode-handoff conv state
+    conv_tail = xs[:, -(cfg.ssm_conv - 1):, :].astype(jnp.float32)
+    xs = jax.nn.silu(_conv_causal(p, xs, cfg))
+    h0 = (jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+          if ssm_state is None else ssm_state)
+
+    n = max(S // CHUNK, 1)
+    c = S // n
+    xs_c = xs.reshape(B, n, c, di).transpose(1, 0, 2, 3)          # (n,B,c,di)
+
+    @jax.checkpoint
+    def chunk_step(h, xs_chunk):
+        dA, dBx, Cm = _ssm_inputs(p, xs_chunk, cfg)               # (B,c,di,N)
+        b0 = dBx.at[:, 0].add(dA[:, 0] * h)
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        _, hs = jax.lax.associative_scan(comb, (dA, b0), axis=1)
+        y_c = jnp.einsum("bsdn,bsn->bsd", hs, Cm,
+                         preferred_element_type=jnp.float32)
+        y_c = (y_c + xs_chunk.astype(jnp.float32) * p["d_skip"]
+               ).astype(x.dtype)
+        return hs[:, -1], y_c
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, xs_c)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y * jax.nn.silu(z)
+    out = linear(p["out_proj"], y, cfg.quant_mode)
+    return out, (h_last, conv_tail)
+
+
+def init_mamba_state(cfg, batch):
+    return {
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32),
+    }
+
+
+def mamba_decode_step(p, x, cfg, state):
+    """One-token recurrent update.  x (B, 1, d); state dict from
+    ``init_mamba_state``.  Returns (y (B,1,d), new_state)."""
+    B = x.shape[0]
+    xz = linear(p["in_proj"], x, cfg.quant_mode)
+    xs, z = jnp.split(xz, 2, axis=-1)                              # (B,1,di)
+    conv_buf = jnp.concatenate([state["conv"], xs.astype(jnp.float32)], axis=1)
+    w = p["conv1d_w"]                                              # (cw, di)
+    xc = jnp.einsum("bcd,cd->bd", conv_buf, w) + p["conv1d_b"]
+    xc = jax.nn.silu(xc)[:, None, :]                               # (B,1,di)
+    dA, dBx, Cm = _ssm_inputs(p, xc.astype(x.dtype), cfg)
+    h = state["ssm"] * dA[:, 0] + dBx[:, 0]                        # (B,di,N)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0],
+                   preferred_element_type=jnp.float32)
+    y = (y + xc[:, 0].astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    y = y[:, None, :] * jax.nn.silu(z)
+    out = linear(p["out_proj"], y, cfg.quant_mode)
+    return out, {"ssm": h, "conv": conv_buf[:, 1:, :]}

@@ -1,0 +1,278 @@
+"""Model stacks for every assigned family: decoder-only (dense/MoE/SSM/
+hybrid), encoder-decoder (whisper), VLM backbone (qwen2-vl).
+
+Layers are parameter-stacked and driven by ``jax.lax.scan`` (compile time is
+O(1) in depth — granite's 88 layers lower as one loop).  Hybrid stacks scan
+over (rec, rec, attn) groups with an unrolled remainder.  Each block is
+wrapped in ``jax.checkpoint`` when cfg.remat (activation recomputation keeps
+the train_4k cells inside HBM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rglru, ssm
+from repro.quant import linear, embed, tied_logits
+
+
+# ---------------------------------------------------------------------------
+# Single blocks.
+# ---------------------------------------------------------------------------
+def init_block(cfg, key, kind):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": layers.init_norm(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = attention.init_attention(cfg, ks[0])
+    elif kind == "rec":
+        p["rec"] = rglru.init_rglru(cfg, ks[0])
+    elif kind == "mamba":
+        p["mamba"] = ssm.init_mamba(cfg, ks[0])
+    elif kind == "xattn":     # decoder block with self + cross attention
+        p["attn"] = attention.init_attention(cfg, ks[0])
+        p["norm_x"] = layers.init_norm(cfg, cfg.d_model)
+        p["xattn"] = attention.init_attention(cfg, ks[2], cross=True)
+    # FFN half (mamba blocks have none; MoE blocks carry expert weights).
+    if kind != "mamba":
+        p["norm2"] = layers.init_norm(cfg, cfg.d_model)
+        if cfg.family == "moe":
+            p["moe"] = moe.init_moe(cfg, ks[1])
+        else:
+            p["mlp"] = layers.init_mlp(cfg, ks[1])
+    return p
+
+
+def apply_block(p, x, cfg, kind, positions, enc_kv=None):
+    """Full-sequence (train / prefill) block.  Returns (x, state, aux)."""
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    state = None
+    if kind in ("attn", "xattn"):
+        y, (k, v, k_pos) = attention.attention_block(p["attn"], h, cfg, positions)
+        state = {"k": k, "v": v, "k_pos": k_pos}
+        x = x + y
+        if kind == "xattn":
+            hx = layers.apply_norm(p["norm_x"], x, cfg)
+            ekv = attention.project_enc_kv(p["xattn"], enc_kv, cfg)
+            x = x + attention.cross_attention_block(p["xattn"], hx, cfg, ekv)
+    elif kind == "rec":
+        y, state = rglru.rglru_block(p["rec"], h, cfg)
+        x = x + y
+    elif kind == "mamba":
+        y, (h_last, conv_tail) = ssm.mamba_block(p["mamba"], h, cfg)
+        state = {"ssm": h_last, "conv": conv_tail}
+        x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if kind != "mamba":
+        h2 = layers.apply_norm(p["norm2"], x, cfg)
+        if cfg.family == "moe":
+            y2, aux = moe.moe_ffn(p["moe"], h2, cfg)
+        else:
+            y2 = layers.apply_mlp(p["mlp"], h2, cfg)
+        x = x + y2
+    return x, state, aux
+
+
+def apply_block_decode(p, x, cfg, kind, positions, cache, enc_kv=None):
+    """One-token decode block.  Returns (x, new_cache)."""
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    if kind in ("attn", "xattn"):
+        y, cache = attention.decode_attention_block(p["attn"], h, cfg,
+                                                    positions, cache)
+        x = x + y
+        if kind == "xattn":
+            hx = layers.apply_norm(p["norm_x"], x, cfg)
+            ekv = attention.project_enc_kv(p["xattn"], enc_kv, cfg)
+            x = x + attention.cross_attention_block(p["xattn"], hx, cfg, ekv)
+    elif kind == "rec":
+        y, cache = rglru.rglru_decode_step(p["rec"], h, cfg, cache)
+        x = x + y
+    elif kind == "mamba":
+        y, cache = ssm.mamba_decode_step(p["mamba"], h, cfg, cache)
+        x = x + y
+    if kind != "mamba":
+        h2 = layers.apply_norm(p["norm2"], x, cfg)
+        if cfg.family == "moe":
+            y2, _ = moe.moe_ffn(p["moe"], h2, cfg)
+        else:
+            y2 = layers.apply_mlp(p["mlp"], h2, cfg)
+        x = x + y2
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack layout helpers.
+# ---------------------------------------------------------------------------
+def layer_kinds(cfg):
+    """Per-layer block kind for the decoder stack."""
+    if cfg.family == "ssm":
+        return ["mamba"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+    if cfg.family == "encdec":
+        return ["xattn"] * cfg.n_layers
+    return ["attn"] * cfg.n_layers
+
+
+def _stack_groups(cfg):
+    """(group_kinds, n_scanned_groups, tail_kinds): scan unit for the stack."""
+    kinds = layer_kinds(cfg)
+    if cfg.family == "hybrid":
+        pat = list(cfg.block_pattern)
+        g = len(pat)
+        n_groups = cfg.n_layers // g
+        tail = kinds[n_groups * g:]
+        return pat, n_groups, tail
+    return [kinds[0]], cfg.n_layers, []
+
+
+def init_decoder_stack(cfg, key):
+    group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
+    keys = jax.random.split(key, n_groups + len(tail_kinds))
+
+    def one_group(k):
+        gks = jax.random.split(k, len(group_kinds))
+        return {f"b{i}_{kind}": init_block(cfg, gk, kind)
+                for i, (kind, gk) in enumerate(zip(group_kinds, gks))}
+
+    groups = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[one_group(keys[i]) for i in range(n_groups)]
+    ) if n_groups > 1 else one_group(keys[0])
+    if n_groups == 1:
+        groups = jax.tree_util.tree_map(lambda x: x[None], groups)
+    tail = [init_block(cfg, keys[n_groups + i], kind)
+            for i, kind in enumerate(tail_kinds)]
+    return {"groups": groups, "tail": tail}
+
+
+def _group_apply(gp, x, cfg, group_kinds, positions, enc_kv=None):
+    states, aux = {}, jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(group_kinds):
+        x, st, a = apply_block(gp[f"b{i}_{kind}"], x, cfg, kind, positions,
+                               enc_kv)
+        states[f"b{i}"] = st
+        aux = aux + a
+    return x, states, aux
+
+
+def _constrain_act(x, cfg):
+    """Pin the inter-block residual stream to (batch: dp axes, seq: model,
+    d: replicated).  Cuts scan-saved activations 16x and stops the SPMD
+    partitioner from replicating the batch dim (DESIGN.md §5)."""
+    if not cfg.act_seq_axis or x.ndim != 3 or x.shape[1] <= 1:
+        return x
+    from jax.sharding import PartitionSpec as P
+    bax = cfg.act_batch_axes or None
+    return jax.lax.with_sharding_constraint(
+        x, P(bax, cfg.act_seq_axis, None))
+
+
+def apply_decoder_stack(p, x, cfg, positions, enc_kv=None, collect_cache=False):
+    """Returns (x, stacked_states_or_None, total_aux)."""
+    group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
+
+    def body(carry, gp):
+        x, aux = carry
+        x = _constrain_act(x, cfg)
+        x, states, a = _group_apply(gp, x, cfg, group_kinds, positions, enc_kv)
+        x = _constrain_act(x, cfg)
+        return (x, aux + a), (states if collect_cache else 0)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        (x, aux), states = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                        p["groups"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        collected = []
+        for i in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda a: a[i], p["groups"])
+            (x, aux), st = body_fn((x, aux), gp)
+            collected.append(st)
+        states = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *collected)
+                  if collect_cache else None)
+    tail_states = []
+    for tp, kind in zip(p["tail"], tail_kinds):
+        x, st, a = apply_block(tp, x, cfg, kind, positions, enc_kv)
+        aux = aux + a
+        tail_states.append(st)
+    return x, (states, tail_states) if collect_cache else None, aux
+
+
+def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None):
+    """cache = (group_cache_stacked, tail_cache_list) as produced by
+    ``init_stack_cache``.  Returns (x, new_cache)."""
+    group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
+    g_cache, t_cache = cache
+
+    def body(x, xs):
+        gp, gc = xs
+        new_c = {}
+        for i, kind in enumerate(group_kinds):
+            x, nc = apply_block_decode(gp[f"b{i}_{kind}"], x, cfg, kind,
+                                       positions, gc[f"b{i}"], enc_kv)
+            new_c[f"b{i}"] = nc
+        return x, new_c
+
+    x, new_g_cache = jax.lax.scan(body, x, (p["groups"], g_cache))
+    new_t = []
+    for tp, kind, tc in zip(p["tail"], tail_kinds, t_cache):
+        x, nc = apply_block_decode(tp, x, cfg, kind, positions, tc, enc_kv)
+        new_t.append(nc)
+    return x, (new_g_cache, new_t)
+
+
+def init_stack_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
+    group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
+
+    def one(kind):
+        if kind in ("attn", "xattn"):
+            return attention.init_kv_cache(cfg, batch, seq_len, dtype)
+        if kind == "rec":
+            return rglru.init_rglru_state(cfg, batch)
+        return ssm.init_mamba_state(cfg, batch)
+
+    g = {f"b{i}": one(kind) for i, kind in enumerate(group_kinds)}
+    g = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), g)
+    t = [one(kind) for kind in tail_kinds]
+    return (g, t)
+
+
+# ---------------------------------------------------------------------------
+# Encoder stack (whisper).
+# ---------------------------------------------------------------------------
+def init_encoder_stack(cfg, key):
+    keys = jax.random.split(key, cfg.n_enc_layers)
+    blocks = [
+        {"norm1": layers.init_norm(cfg, cfg.d_model),
+         "attn": attention.init_attention(cfg, k),
+         "norm2": layers.init_norm(cfg, cfg.d_model),
+         "mlp": layers.init_mlp(cfg, jax.random.fold_in(k, 1))}
+        for k in keys
+    ]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+
+def apply_encoder_stack(p, x, cfg):
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, bp):
+        h = layers.apply_norm(bp["norm1"], x, cfg)
+        hd, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+        q = linear(bp["attn"]["wq"], h, cfg.quant_mode).reshape(B, S, hq, hd)
+        k = linear(bp["attn"]["wk"], h, cfg.quant_mode).reshape(B, S, hkv, hd)
+        v = linear(bp["attn"]["wv"], h, cfg.quant_mode).reshape(B, S, hkv, hd)
+        o = attention.sdpa(q, k, v, pos, pos, causal=False, window=0)
+        x = x + linear(bp["attn"]["wo"], o.reshape(B, S, -1), cfg.quant_mode)
+        h2 = layers.apply_norm(bp["norm2"], x, cfg)
+        x = x + layers.apply_mlp(bp["mlp"], h2, cfg)
+        return x, 0
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, p)
+    return x

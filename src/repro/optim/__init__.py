@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw, sgd, cosine_schedule, clip_by_global_norm  # noqa: F401
+from repro.optim.compress import compress_gradients, decompress_gradients  # noqa: F401

@@ -1,0 +1,107 @@
+"""Optimizers (pure JAX, pytree-native): AdamW + SGD-momentum, cosine/linear
+LR schedules, global-norm clipping.  Built here rather than importing optax
+(offline container; also keeps the optimizer-state sharding rules trivially
+derivable: moments inherit the param PartitionSpec — see runtime/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class adamw:
+    lr: Callable | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * gf
+            v2 = self.b2 * v + (1 - self.b2) * gf * gf
+            mh, vh = m2 / b1c, v2 / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+        flat = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}
+
+
+@dataclasses.dataclass(frozen=True)
+class sgd:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: float = 0.0
+
+    def init(self, params):
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            v={})
+
+    def update(self, grads, state, params):
+        gnorm = jnp.zeros(())
+        if self.clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        def upd(p, g, m):
+            m2 = self.momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m2).astype(p.dtype), m2
+
+        flat = jax.tree_util.tree_map(upd, params, grads, state.m)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(step, new_m, {}), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,53 @@
+"""INT8 gradient compression with error feedback — the distributed-
+optimization trick for the cross-pod all-reduce (DESIGN.md §5).
+
+The same PSI insight that compresses weights applies to gradient traffic: the
+data-parallel all-reduce payload dominates cross-pod ICI at (2,16,16) scale.
+Gradients are quantized to int8 (per-leaf symmetric scale) before the
+all-reduce and the quantization residual is carried to the next step
+(error feedback — keeps SGD convergence; Seide et al. 2014, Karimireddy et
+al. 2019).  4x payload reduction vs f32, 2x vs bf16.
+
+Usage (in the train step, around the psum / before optimizer.update):
+    cg, new_err = compress_gradients(grads, err)
+    cg = jax.lax.psum(cg_int_as_float…)        # or jit-level sharding
+    grads = decompress_gradients(cg)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _compress_leaf(g, e):
+    gf = g.astype(jnp.float32) + e
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    err = gf - q.astype(jnp.float32) * scale
+    return {"q": q, "scale": scale}, err
+
+
+def compress_gradients(grads, err_state=None) -> Tuple[dict, dict]:
+    """Returns (compressed_tree, new_error_feedback_tree)."""
+    if err_state is None:
+        err_state = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    pairs = jax.tree_util.tree_map(_compress_leaf, grads, err_state)
+    comp = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return comp, err
+
+
+def decompress_gradients(comp):
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf["q"].astype(jnp.float32) * leaf["scale"],
+        comp, is_leaf=lambda l: isinstance(l, dict) and "q" in l)
+
+
+def compressed_bytes(comp) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(comp))

@@ -1,0 +1,1 @@
+from repro.quant.linear import linear, embed, tied_logits  # noqa: F401

@@ -1,0 +1,61 @@
+"""PsiLinear — the single matmul entry point used by every model layer.
+
+Three code paths, selected by the weight leaf's *type* and the config's
+``quant_mode``:
+
+* plain float leaf, mode "none"            -> bf16 einsum (MXU, f32 accum)
+* plain float leaf, mode "qat5"/"qat8"     -> fake-quant STE then einsum
+  (the paper's "trained with the proposed quantization")
+* serving dict leaf ({"codes"|"planes", "scale"}) -> PSI kernel
+  (``repro.kernels.ops``: Pallas on TPU, oracle on CPU)
+
+Keeping one entry point means every architecture in the zoo gets the paper's
+technique for free, and the dry-run's HBM byte counts reflect the compressed
+weight format.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import psi
+from repro.kernels import ops
+
+_QAT_BITS = {"qat5": 5, "qat8": 8}
+
+
+def _maybe_fake_quant(w: jnp.ndarray, quant_mode: str, axis) -> jnp.ndarray:
+    bits = _QAT_BITS.get(quant_mode)
+    if bits is None:
+        return w
+    return psi.fake_quant_ste(w, bits, axis)
+
+
+def linear(wleaf, x: jnp.ndarray, quant_mode: str = "none") -> jnp.ndarray:
+    """x (..., K) @ w (K, N) -> (..., N)."""
+    if isinstance(wleaf, dict):                      # PSI serving format
+        return ops.psi_matmul(x, wleaf)
+    w = _maybe_fake_quant(wleaf, quant_mode, axis=(wleaf.ndim - 2,))
+    y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed(wleaf, ids: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Embedding lookup; PSI tables dequantize per gathered row."""
+    if isinstance(wleaf, dict):
+        codes = wleaf["codes"]                       # (V, D) int8
+        rows = codes[ids].astype(jnp.float32) * wleaf["scale"][ids]
+        return rows.astype(dtype)
+    return wleaf[ids].astype(dtype)
+
+
+def tied_logits(wleaf, x: jnp.ndarray, quant_mode: str = "none") -> jnp.ndarray:
+    """logits = x @ embed_table.T with per-row (= per-vocab-output) scales."""
+    if isinstance(wleaf, dict):
+        codes_t = wleaf["codes"].T                   # (D, V)
+        return ops.psi_matmul(x, {"codes": codes_t,
+                                  "scale": wleaf["scale"].reshape(-1)})
+    w = _maybe_fake_quant(wleaf, quant_mode, axis=(wleaf.ndim - 1,))
+    y = jnp.einsum("...d,vd->...v", x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,3 @@
+from repro.runtime.sharding import (  # noqa: F401
+    param_specs, batch_specs, cache_specs, FSDP_AXIS, DP_AXES,
+)

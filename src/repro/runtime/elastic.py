@@ -1,0 +1,64 @@
+"""Elastic scaling + failure handling.
+
+At 1000+ nodes, hardware loss is routine.  The recovery contract here:
+
+1. Every N steps the CheckpointManager persists (params, opt_state, data
+   state) with *global* array layouts.
+2. On failure, the coordinator restarts the job on the surviving slice;
+   ``plan_remesh`` picks the largest valid mesh for the new device count.
+3. ``CheckpointManager.restore(shardings=...)`` reshards every leaf onto the
+   new mesh — no resharding tool step, it is the load path itself.
+4. The data pipeline's state is one integer; after re-sharding hosts resume
+   the exact global sample sequence (repro.data.pipeline).
+
+``plan_remesh`` prefers shrinking the data axis first (keeps TP intact, so
+per-device weight shards — and therefore compiled executables — are reusable
+across restarts with the same model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_devices: int
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def plan_remesh(n_available: int, model_parallel: int,
+                pods: Optional[int] = None) -> MeshPlan:
+    """Largest (data, model) mesh with the given TP degree that fits the
+    surviving device count; excess devices become hot spares."""
+    if n_available < model_parallel:
+        raise ValueError(
+            f"cannot keep TP={model_parallel} with {n_available} devices")
+    data = n_available // model_parallel
+    if pods and pods > 1 and data % pods == 0:
+        shape = (pods, data // pods, model_parallel)
+        names = ("pod", "data", "model")
+    else:
+        shape = (data, model_parallel)
+        names = ("data", "model")
+    used = int(np.prod(shape))
+    return MeshPlan(shape, names, n_available - used)
+
+
+def make_mesh_from_plan(plan: MeshPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    usable = np.asarray(devices[:plan.n_devices]).reshape(plan.shape)
+    return jax.sharding.Mesh(usable, plan.axis_names)
+
+
+def survivors_after_failure(devices, failed_ids) -> list:
+    failed = set(failed_ids)
+    return [d for d in devices if d.id not in failed]

@@ -1,0 +1,320 @@
+"""Partition rules: map every parameter / batch / cache leaf to a
+PartitionSpec for the production mesh (DESIGN.md §5).
+
+Axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")`` multi-pod
+("pod" joins "data" as an outer data-parallel / FSDP axis).
+
+Serving: weights TP over "model", replicated over data; batch over "data".
+Training: FSDP — the non-TP weight dim is additionally sharded over the
+data axes (ZeRO-3 semantics under GSPMD: all-gather on use, reduce-scatter
+on grad), optimizer moments inherit the param spec.
+
+Rules are *logical*: a rule names the spec of the trailing (weight) dims;
+leading layer-stack dims are automatically None.  Quantized serving leaves
+(codes/planes/scale dicts) derive their spec from the same logical rule.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP_AXIS = "data"
+DP_AXES = ("pod", "data")        # outer batch axes when present
+
+# Models narrower than this gain nothing from 16-way tensor parallelism —
+# per-shard GEMMs degenerate (d_ff/16 < MXU tile) and every layer pays two
+# all-reduces.  Below the threshold the "model" axis is repurposed as extra
+# data/sequence parallelism and weights replicate (whisper-base: 70 MB).
+TP_MIN_D_MODEL = 1024
+
+
+def tp_enabled(cfg) -> bool:
+    return cfg.d_model >= TP_MIN_D_MODEL
+
+
+def _dp(mesh: Mesh, cfg=None) -> Tuple:
+    """Data-parallel axes present in this mesh (flattened for batch dim).
+    When TP is disabled for this arch, "model" joins the batch axes."""
+    axes = tuple(a for a in DP_AXES if a in mesh.axis_names)
+    if cfg is not None and not tp_enabled(cfg) and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    return axes
+
+
+def _divisible(n: int, mesh: Mesh, axes) -> bool:
+    if not axes:
+        return False
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+# ---------------------------------------------------------------------------
+# Logical rules: (path regex) -> trailing-dims spec builder.
+# Specs use "model" for TP and "fsdp" as a placeholder replaced by the data
+# axes in training mode / None in serving mode.
+# ---------------------------------------------------------------------------
+_RULES = (
+    # embeddings: vocab over model (model-parallel logits); d replicated —
+    # FSDP-sharding the gather output dim provokes involuntary remat in the
+    # SPMD partitioner (resharding a gather across the batch axes).
+    (r"(^|/)embed$",        ("model", None)),
+    (r"(^|/)lm_head$",      (None, "model")),
+    # attention
+    (r"(^|/)wq$",           ("fsdp", "model")),
+    (r"(^|/)wk$",           ("fsdp", "model")),
+    (r"(^|/)wv$",           ("fsdp", "model")),
+    (r"(^|/)wo$",           ("model", "fsdp")),
+    # dense mlp
+    (r"(^|/)w_gate$",       ("fsdp", "model")),   # moe experts override below
+    (r"(^|/)w_up$",         ("fsdp", "model")),
+    (r"(^|/)w_down$",       ("model", "fsdp")),
+    # rg-lru
+    (r"(^|/)w_in_rec$",     ("fsdp", "model")),
+    (r"(^|/)w_in_gate$",    ("fsdp", "model")),
+    (r"(^|/)rglru_wa$",     ("fsdp", "model")),
+    (r"(^|/)rglru_wx$",     ("fsdp", "model")),
+    (r"(^|/)rglru_(ba|bx|lambda)$", ("model",)),
+    (r"(^|/)w_out$",        ("model", "fsdp")),
+    # mamba
+    (r"(^|/)in_proj$",      ("fsdp", "model")),
+    (r"(^|/)x_proj$",       ("model", "fsdp")),
+    (r"(^|/)dt_proj_w$",    ("fsdp", "model")),
+    (r"(^|/)dt_proj_b$",    ("model",)),
+    (r"(^|/)out_proj$",     ("model", "fsdp")),
+    (r"(^|/)a_log$",        ("model", None)),
+    (r"(^|/)d_skip$",       ("model",)),
+    (r"(^|/)conv1d_w$",     (None, "model")),
+    (r"(^|/)conv1d_b$",     ("model",)),
+    # moe router
+    (r"(^|/)router$",       ("fsdp", None)),
+)
+
+_MOE_EP = {  # experts divide the model axis: expert parallelism
+    r"(^|/)w_gate$": ("model", "fsdp", None),
+    r"(^|/)w_up$":   ("model", "fsdp", None),
+    r"(^|/)w_down$": ("model", None, "fsdp"),
+}
+_MOE_TP = {  # tensor parallelism inside each expert
+    r"(^|/)w_gate$": (None, "fsdp", "model"),
+    r"(^|/)w_up$":   (None, "fsdp", "model"),
+    r"(^|/)w_down$": (None, "model", "fsdp"),
+}
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _logical_spec(path: str, cfg, mesh: Mesh) -> Optional[Tuple]:
+    if cfg.n_experts and re.search(r"moe/", path):
+        table = (_MOE_EP if _divisible(cfg.n_experts, mesh, "model")
+                 else _MOE_TP)
+        for pat, spec in table.items():
+            if re.search(pat, path):
+                return spec
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            return spec
+    return None                       # norms, misc small params -> replicate
+
+
+def _materialize(spec_tail, leaf_shape, mesh: Mesh, mode: str,
+                 use_tp: bool = True):
+    """Map a logical trailing spec onto a concrete leaf shape; leading dims
+    (layer stacks) replicate.  'fsdp' resolves to the data axes in train
+    mode, None otherwise.  Axes that don't divide the dim are dropped."""
+    fsdp = tuple(a for a in DP_AXES if a in mesh.axis_names) if mode == "train" else None
+    tail = []
+    for dim, ax in zip(leaf_shape[-len(spec_tail):], spec_tail):
+        if ax == "model" and not use_tp:
+            ax = None
+        if ax == "fsdp":
+            ax = fsdp
+        if ax is None:
+            tail.append(None)
+            continue
+        if not _divisible(dim, mesh, ax):
+            # fall back: try a single axis out of a tuple, else replicate
+            if isinstance(ax, tuple):
+                ax = next((a for a in ax if dim % mesh.shape[a] == 0), None)
+                tail.append(ax)
+            else:
+                tail.append(None)
+            continue
+        tail.append(ax)
+    lead = [None] * (len(leaf_shape) - len(spec_tail))
+    return P(*(lead + tail))
+
+
+def _spec_for_quant_dict(leaf: dict, spec_tail, mesh: Mesh, mode: str,
+                         use_tp: bool = True):
+    """Serving-format dict leaf: codes keep the weight spec; planes add a
+    bit-plane dim; scale shards only its non-singleton dims."""
+    out = {}
+    if "codes" in leaf:
+        out["codes"] = _materialize(spec_tail, leaf["codes"].shape, mesh, mode,
+                                    use_tp)
+    if "planes" in leaf:
+        pl = leaf["planes"].shape           # (..., 5, K//8, N)
+        out["planes"] = _materialize((None,) + tuple(spec_tail), pl, mesh,
+                                     mode, use_tp)
+    sc = leaf["scale"].shape
+    sc_tail = [ax if sc[-len(spec_tail) + i] > 1 else None
+               for i, ax in enumerate(spec_tail)]
+    out["scale"] = _materialize(tuple(sc_tail), sc, mesh, mode, use_tp)
+    return out
+
+
+def _is_leafdict(x):
+    return isinstance(x, dict) and ("codes" in x or "planes" in x) and "scale" in x
+
+
+def param_specs(params, cfg, mesh: Mesh, mode: str = "serve"):
+    """PartitionSpec pytree matching ``params`` (plain or PSI-quantized)."""
+    use_tp = tp_enabled(cfg)
+    if not use_tp:
+        # Small model: replicate everything (whisper-base: 70 MB of weights);
+        # the mesh axes all become batch parallelism.  Mixing FSDP shards
+        # with >16-way batch sharding provokes involuntary rematerialization
+        # in the SPMD partitioner (observed: 217 GB replicated logits).
+        def repl(leaf):
+            if _is_leafdict(leaf):
+                return {k: P() for k in leaf}
+            return P()
+        return jax.tree_util.tree_map(repl, params, is_leaf=_is_leafdict)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        spec_tail = _logical_spec(p, cfg, mesh)
+        if _is_leafdict(leaf):
+            if spec_tail is None:
+                return {k: P() for k in leaf}
+            return _spec_for_quant_dict(leaf, spec_tail, mesh, mode, use_tp)
+        if spec_tail is None or leaf.ndim < len(spec_tail):
+            return P()
+        return _materialize(spec_tail, leaf.shape, mesh, mode, use_tp)
+
+    return jax.tree_util.tree_map_with_path(one, params, is_leaf=_is_leafdict)
+
+
+def batch_specs(cfg, mesh: Mesh, batch_tree, seq_shard: bool = False):
+    """Input batch: batch dim over the data axes (replicated if indivisible,
+    e.g. long_500k's batch=1).  When TP is off for this arch, "model" joins
+    the batch axes; if the batch still can't use it, the token sequence dim
+    is sharded over "model" instead (sequence parallelism)."""
+    dp = _dp(mesh, cfg)
+    free_model = (not tp_enabled(cfg)) and "model" in mesh.axis_names
+
+    def pick_bax(B):
+        if _divisible(B, mesh, dp):
+            return dp
+        for k in range(len(dp) - 1, 0, -1):
+            if _divisible(B, mesh, dp[:k]):
+                return dp[:k]
+        return next((a for a in dp if B % mesh.shape[a] == 0), None)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if leaf.ndim == 0:
+            return P()
+        B = leaf.shape[0]
+        bax = pick_bax(B)
+        spec = [bax] + [None] * (leaf.ndim - 1)
+        used = set()
+        for a in (bax if isinstance(bax, tuple) else (bax,) if bax else ()):
+            used.add(a)
+        if name == "tokens" and leaf.ndim >= 2:
+            S = leaf.shape[1]
+            if free_model and "model" not in used and S % mesh.shape["model"] == 0:
+                spec[1] = "model"           # sequence parallelism
+            elif seq_shard and bax is None and _divisible(S, mesh, "data"):
+                spec[1] = "data"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs(cfg, mesh: Mesh, cache_tree, seq_shard: bool = False):
+    """Decode cache: batch over data axes; KV seq (ring) dim over "data" when
+    the batch can't use it (long_500k); mamba/rg-lru channel state over
+    "model"; KV heads over "model" only when divisible (MQA/GQA: replicate).
+    Leaf shapes:
+      attn k/v:   (G, B, C, Hkv, hd)    k_pos: (G, B, C)
+      mamba ssm:  (G, B, di, N)   conv: (G, B, cw-1, di)
+      rglru h:    (G, B, dr)      conv: (G, B, cw-1, dr)
+      enc_out:    (B, F, d)
+    """
+    dp = _dp(mesh, cfg)
+    use_tp = tp_enabled(cfg)
+    model_free = "model" if not use_tp else None
+
+    def pick_bax(B):
+        if _divisible(B, mesh, dp):
+            return dp
+        for k in range(len(dp) - 1, 0, -1):
+            if _divisible(B, mesh, dp[:k]):
+                return dp[:k]
+        return next((a for a in dp if B % mesh.shape[a] == 0), None)
+
+    def kv_layout(B, C, Hkv):
+        """(batch_ax, seq_ax, head_ax) for KV cache tensors — one decision
+        shared by k, v, and k_pos so masks stay co-sharded with values."""
+        bax = pick_bax(B)
+        used = set(bax if isinstance(bax, tuple) else (bax,) if bax else ())
+        head_ax = "model" if (use_tp and Hkv % mesh.shape["model"] == 0) else None
+        seq_ax = None
+        if head_ax is None:
+            # heads unshardable (MQA/GQA < TP degree): shard the KV ring dim
+            # over whichever axis is free — "model" first (it is otherwise
+            # idle for this tensor), then "data" (long_500k's batch=1).
+            cand = ("model", "data") if "model" in mesh.axis_names else ("data",)
+            for a in cand:
+                if a not in used and C % mesh.shape[a] == 0:
+                    seq_ax = a
+                    break
+        return bax, seq_ax, head_ax
+
+    def one(path, leaf):
+        name = _path_str(path)
+        if leaf.ndim == 0:
+            return P()
+        shape = leaf.shape
+        if name.endswith("enc_out"):
+            return P(pick_bax(shape[0]), None, None)
+        b_idx = 1  # stack caches always carry the group dim first
+        B = shape[b_idx]
+        bax = pick_bax(B)
+        spec = [None] * leaf.ndim
+        spec[b_idx] = bax
+        if re.search(r"/k$|/v$|k_scale$|v_scale$", name) and leaf.ndim == 5:
+            spec[1], spec[2], spec[3] = kv_layout(
+                B, shape[2], max(cfg.n_kv_heads, 1))
+            if shape[3] % mesh.shape.get("model", 1) != 0 and spec[3]:
+                spec[3] = None
+        elif re.search(r"k_pos", name) and leaf.ndim == 3:
+            # same layout decision as k/v (real kv-head count matters)
+            spec[1], spec[2], _ = kv_layout(B, shape[2],
+                                            max(cfg.n_kv_heads, 1))
+        elif re.search(r"ssm$", name) and leaf.ndim == 4:
+            if use_tp and _divisible(shape[2], mesh, "model"):
+                spec[2] = "model"
+        elif re.search(r"conv$", name) and leaf.ndim == 4:
+            if use_tp and _divisible(shape[3], mesh, "model"):
+                spec[3] = "model"
+        elif re.search(r"/h$", name) and leaf.ndim == 3:
+            if use_tp and _divisible(shape[2], mesh, "model"):
+                spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,61 @@
+"""Straggler detection: per-host step-time heartbeats with robust z-scores.
+
+In a synchronous data-parallel step the slowest host sets the pace; at pod
+scale a single degraded host (thermal throttle, flaky HBM, loud neighbor on
+the ICI) silently taxes every step.  The monitor keeps an EWMA of each
+host's step time, flags hosts slower than ``threshold`` x the fleet median
+for ``patience`` consecutive windows, and recommends eviction (which feeds
+repro.runtime.elastic.plan_remesh).
+
+The mitigation ladder (documented for the launcher):
+  1. flag + log (this module),
+  2. re-balance input shards away from the slow host (data pipeline takes
+     host weights),
+  3. evict + re-mesh from checkpoint (elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    alpha: float = 0.2            # EWMA smoothing
+    threshold: float = 1.25       # x median
+    patience: int = 3
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.n_hosts)
+        self.strikes = np.zeros(self.n_hosts, np.int32)
+        self.initialized = False
+
+    def observe(self, step_times: List[float]) -> Dict:
+        t = np.asarray(step_times, np.float64)
+        if not self.initialized:
+            self.ewma[:] = t
+            self.initialized = True
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * t
+        med = np.median(self.ewma)
+        slow = self.ewma > self.threshold * med
+        self.strikes = np.where(slow, self.strikes + 1, 0)
+        flagged = np.nonzero(self.strikes >= self.patience)[0].tolist()
+        return {
+            "median_s": float(med),
+            "slowest_host": int(np.argmax(self.ewma)),
+            "slowdown": float(self.ewma.max() / max(med, 1e-12)),
+            "flagged_hosts": flagged,
+            "evict_recommended": bool(flagged),
+        }
+
+    def input_weights(self) -> np.ndarray:
+        """Relative data-shard weights for soft rebalancing (step 2 of the
+        ladder): inverse of smoothed step time, normalized."""
+        if not self.initialized:
+            return np.ones(self.n_hosts) / self.n_hosts
+        w = 1.0 / np.maximum(self.ewma, 1e-9)
+        return w / w.sum()

@@ -1,0 +1,175 @@
+"""Unit + property tests for attention internals, MoE invariants, and the
+quantized-embedding paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.models import attention, moe
+from repro.models.layers import apply_rope
+
+
+def _cfg(**kw):
+    return reduced_config(get_config("qwen3-8b"), **kw)
+
+
+class TestSDPA:
+    def test_chunked_matches_dense(self):
+        """Chunked prefill == unchunked attention (incl. padded tail)."""
+        cfg = _cfg()
+        B, S, H, D = 2, 48, 4, 16
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(k1, (B, S, H, D))
+        k = jax.random.normal(k2, (B, S, 2, D))
+        v = jax.random.normal(k3, (B, S, 2, D))
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        dense = attention.sdpa(q, k, v, pos, pos, causal=True, q_chunk=S + 1)
+        chunked = attention.sdpa(q, k, v, pos, pos, causal=True, q_chunk=16)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_chunk_padding_path(self):
+        """Sq not divisible by chunk (whisper's 1500-frame encoder)."""
+        B, S = 1, 37
+        q = jax.random.normal(jax.random.PRNGKey(0), (B, S, 2, 8))
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        dense = attention.sdpa(q, q, q, pos, pos, causal=False, q_chunk=S + 1)
+        chunked = attention.sdpa(q, q, q, pos, pos, causal=False, q_chunk=16)
+        np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_causality(self):
+        """Future tokens cannot influence past outputs."""
+        B, S, H, D = 1, 16, 2, 8
+        k1, _ = jax.random.split(jax.random.PRNGKey(1))
+        q = jax.random.normal(k1, (B, S, H, D))
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        o1 = attention.sdpa(q, q, q, pos, pos, causal=True)
+        q2 = q.at[:, -1].set(99.0)
+        o2 = attention.sdpa(q2, q2, q2, pos, pos, causal=True)
+        np.testing.assert_allclose(np.asarray(o1[:, :-1]),
+                                   np.asarray(o2[:, :-1]), rtol=1e-5)
+
+    @given(st.integers(4, 24))
+    @settings(max_examples=8, deadline=None)
+    def test_window_mask_property(self, window):
+        """With window w, output at position i only depends on positions
+        in (i-w, i]."""
+        B, S, H, D = 1, 32, 1, 4
+        q = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        o1 = attention.sdpa(q, q, q, pos, pos, causal=True, window=window)
+        i = S - 1
+        cutoff = i - window  # positions <= cutoff are invisible to i
+        if cutoff >= 0:
+            q2 = q.at[:, cutoff].set(37.0)
+            o2 = attention.sdpa(q2, q2, q2, pos, pos, causal=True,
+                                window=window)
+            np.testing.assert_allclose(np.asarray(o1[:, i]),
+                                       np.asarray(o2[:, i]), rtol=1e-4,
+                                       atol=1e-4)
+
+    def test_ring_buffer_decode_wraps(self):
+        """SWA ring cache: decoding past the window keeps exactly the last
+        `window` keys visible."""
+        cfg = reduced_config(get_config("mixtral-8x22b"))
+        p = attention.init_attention(cfg, jax.random.PRNGKey(0))
+        B, W = 1, cfg.window
+        cache = attention.init_kv_cache(cfg, B, W * 3, dtype=jnp.float32)
+        assert cache["k"].shape[1] == W    # bounded by window
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model))
+        for pos in range(W + 4):           # wrap the ring
+            y, cache = attention.decode_attention_block(
+                p, x, cfg, jnp.asarray([[pos]]), cache)
+        kp = np.asarray(cache["k_pos"][0])
+        assert sorted(kp) == list(range(4, W + 4))
+
+
+class TestRoPE:
+    @pytest.mark.parametrize("mode", ["rope", "rope2d"])
+    def test_rotation_preserves_norm(self, mode):
+        cfg = _cfg(rope=mode)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+        pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+        y = apply_rope(x, pos, cfg)
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                                   np.linalg.norm(np.asarray(x), axis=-1),
+                                   rtol=1e-5)
+
+    def test_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i-j."""
+        cfg = _cfg(rope="rope")
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+        def dot_at(i, j):
+            qi = apply_rope(q, jnp.asarray([[i]]), cfg)
+            kj = apply_rope(k, jnp.asarray([[j]]), cfg)
+            return float(jnp.sum(qi * kj))
+        assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+
+    def test_mrope_sections_independent(self):
+        """Changing the h-position stream must not affect the t-section."""
+        cfg = reduced_config(get_config("qwen2-vl-2b"))
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, 16))
+        p1 = jnp.stack([jnp.arange(4)[None]] * 3, axis=1)       # (1,3,4)
+        p2 = p1.at[:, 1].add(7)                                  # shift h only
+        y1 = apply_rope(x, p1, cfg)
+        y2 = apply_rope(x, p2, cfg)
+        nf = 8  # D/2
+        s_t = nf // 2
+        # t-section (first s_t freq pairs) unchanged
+        np.testing.assert_allclose(np.asarray(y1[..., :s_t]),
+                                   np.asarray(y2[..., :s_t]), rtol=1e-6)
+        assert not np.allclose(np.asarray(y1), np.asarray(y2))
+
+
+class TestMoE:
+    def _setup(self, cf=8.0):
+        cfg = reduced_config(get_config("qwen3-moe-30b-a3b"),
+                             capacity_factor=cf)
+        p = moe.init_moe(cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        return cfg, p, x
+
+    def test_output_shape_and_aux(self):
+        cfg, p, x = self._setup()
+        y, aux = moe.moe_ffn(p, x, cfg)
+        assert y.shape == x.shape
+        assert float(aux) > 0
+
+    def test_capacity_dropping_degrades_gracefully(self):
+        """GShard semantics: over-capacity tokens contribute zero; ample
+        capacity drops nothing; capacities in between change only the
+        dropped rows."""
+        cfg, p, x = self._setup()
+        y_full, _ = moe.moe_ffn(p, x, cfg, capacity_override=64)
+        y_more, _ = moe.moe_ffn(p, x, cfg, capacity_override=128)
+        np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_more),
+                                   rtol=1e-5, atol=1e-5)  # no drops either way
+        y_tight, _ = moe.moe_ffn(p, x, cfg, capacity_override=1)
+        zero_rows = (np.abs(np.asarray(y_tight)).max(axis=-1) < 1e-7)
+        full_zero = (np.abs(np.asarray(y_full)).max(axis=-1) < 1e-7)
+        assert zero_rows.sum() > 0          # both slots dropped somewhere
+        assert not full_zero.any()          # ample capacity drops nothing
+
+    def test_gate_weights_convex(self):
+        """Identical expert weights -> MoE == plain FFN of one expert
+        (gates sum to 1 after normalization)."""
+        cfg, p, x = self._setup()
+        one = jax.tree_util.tree_map(lambda a: a, p)
+        for name in ("w_gate", "w_up", "w_down"):
+            one[name] = jnp.broadcast_to(p[name][:1], p[name].shape)
+        y, _ = moe.moe_ffn(one, x, cfg, capacity_override=64)
+        wg, wu, wd = one["w_gate"][0], one["w_up"][0], one["w_down"][0]
+        ref = (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_row_ranks(self):
+        e = jnp.asarray([[1, 0, 1, 1, 0]])
+        ranks = moe._row_ranks(e, 4)
+        np.testing.assert_array_equal(np.asarray(ranks), [[0, 0, 1, 2, 1]])

@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes and finiteness; decode-vs-forward
+consistency; PSI serving path on every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, get_config, list_configs,
+                           reduced_config, shape_applicable)
+from repro.data.pipeline import make_batch_for
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module", params=ASSIGNED_ARCHS)
+def arch_setup(request):
+    cfg = reduced_config(get_config(request.param))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch_for(cfg, 2, 24, jax.random.PRNGKey(1))
+    return cfg, model, params, batch
+
+
+def test_full_configs_match_assignment():
+    assert set(ASSIGNED_ARCHS) <= set(list_configs())
+    spec = {
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+    }
+    for name, (L, d, h, kv, ff, V) in spec.items():
+        c = get_config(name)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, h, kv, ff, V), name
+
+
+def test_forward_shapes_and_finiteness(arch_setup):
+    cfg, model, params, batch = arch_setup
+    logits, _, aux, _ = model.forward(params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+def test_train_step_no_nans(arch_setup):
+    cfg, model, params, batch = arch_setup
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch)[0])(params)
+    assert bool(jnp.isfinite(loss))
+    assert 0 < float(loss) < 20
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_decode_matches_forward(arch_setup):
+    """One decoded token's logits == full forward on the extended sequence."""
+    cfg, model, params, batch = arch_setup
+    B, S = batch["tokens"].shape
+    lp, cache = model.prefill(params, batch, cache_len=S + 4)
+    tok = jnp.argmax(lp, -1)[:, None]
+    db = {"token": tok, "pos": jnp.full((B, 1), S, jnp.int32)}
+    if cfg.family == "vlm":
+        db["positions"] = jnp.full((B, 3, 1), S, jnp.int32)
+    lg, _ = model.decode_step(params, db, cache)
+    b2 = dict(batch)
+    b2["tokens"] = jnp.concatenate([batch["tokens"], tok], 1)
+    if cfg.family == "vlm":
+        b2["positions"] = jnp.concatenate(
+            [batch["positions"], db["positions"]], -1)
+    fl, _, _, _ = model.forward(params, b2)
+    np.testing.assert_allclose(np.asarray(fl[:, -1], np.float32),
+                               np.asarray(lg, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_multi_step_decode(arch_setup):
+    """Eight decode steps stay finite and shape-stable."""
+    cfg, model, params, batch = arch_setup
+    B, S = batch["tokens"].shape
+    lp, cache = model.prefill(params, batch, cache_len=S + 16)
+    tok = jnp.argmax(lp, -1)[:, None]
+    for i in range(8):
+        db = {"token": tok, "pos": jnp.full((B, 1), S + i, jnp.int32)}
+        if cfg.family == "vlm":
+            db["positions"] = jnp.full((B, 3, 1), S + i, jnp.int32)
+        lg, cache = model.decode_step(params, db, cache)
+        assert bool(jnp.isfinite(lg).all())
+        tok = jnp.argmax(lg, -1)[:, None]
+
+
+@pytest.mark.parametrize("bits,pack", [(8, False), (5, True)])
+def test_psi_serving_path(arch_setup, bits, pack):
+    """PSI-quantized forward stays close to the float forward (the paper's
+    technique on every architecture family)."""
+    cfg, model, params, batch = arch_setup
+    fl, _, _, _ = model.forward(params, batch)
+    qp = model.quantize(params, bits, pack=pack)
+    mq = build_model(dataclasses.replace(cfg, quant_mode=f"psi{bits}"))
+    ql, _, _, _ = mq.forward(qp, batch)
+    rel = float(jnp.linalg.norm(ql - fl) / jnp.linalg.norm(fl))
+    assert rel < (0.12 if bits == 8 else 0.55), rel
+    # compression ratio of the quantizable weights
+    from repro.core.quantizer import quantized_bytes
+    assert quantized_bytes(qp) < quantized_bytes(params)
+
+
+def test_qat_step_decreases_loss(arch_setup):
+    """A few QAT-INT8 SGD steps reduce the loss (STE gradients flow)."""
+    cfg, model, params, batch = arch_setup
+    mq = build_model(dataclasses.replace(cfg, quant_mode="qat8"))
+    loss0 = float(mq.loss(params, batch)[0])
+    p = params
+    for _ in range(5):
+        g = jax.grad(lambda pp: mq.loss(pp, batch)[0])(p)
+        p = jax.tree_util.tree_map(lambda a, b: a - 0.3 * b, p, g)
+    loss1 = float(mq.loss(p, batch)[0])
+    assert loss1 < loss0
+
+
+def test_shape_applicability_matrix():
+    """40 cells; long_500k runs only for bounded-state archs (DESIGN.md §4)."""
+    total = runnable = 0
+    long_ok = set()
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        for s, sh in SHAPES.items():
+            total += 1
+            ok, why = shape_applicable(cfg, sh)
+            runnable += ok
+            if ok and s == "long_500k":
+                long_ok.add(a)
+    assert total == 40
+    assert long_ok == {"mixtral-8x22b", "recurrentgemma-9b",
+                       "falcon-mamba-7b"}
+    assert runnable == 33
+
+
+def test_param_counts_in_expected_range():
+    """Analytic param counts are in the class the model names claim."""
+    expect = {"qwen3-8b": (7e9, 10e9), "granite-34b": (30e9, 40e9),
+              "phi3-medium-14b": (12e9, 16e9), "mixtral-8x22b": (130e9, 150e9),
+              "qwen3-moe-30b-a3b": (26e9, 34e9), "falcon-mamba-7b": (6e9, 9e9),
+              "recurrentgemma-9b": (8e9, 12e9), "qwen2-vl-2b": (1.2e9, 2.5e9),
+              "chatglm3-6b": (5e9, 8e9), "whisper-base": (6e7, 1.3e8)}
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count()
+        assert lo < n < hi, (name, n)

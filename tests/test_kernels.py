@@ -1,0 +1,114 @@
+"""Pallas psi_matmul kernels vs the pure-jnp oracle: shape/dtype sweeps in
+interpret mode (the kernel body executes on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import psi
+from repro.kernels import ops, psi_matmul as pk, ref
+
+
+def _quant(w, bits):
+    q = psi.quantize_weights(w, bits, axis=0)
+    return q.codes, q.scale.reshape(-1)
+
+
+SHAPES = [
+    (8, 16, 8),          # tiny (full padding path)
+    (128, 128, 128),     # exactly one tile
+    (200, 136, 72),      # ragged, all dims padded
+    (256, 384, 256),     # multi-tile
+    (1, 512, 128),       # decode-like M=1
+]
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_kernel_vs_ref(M, K, N, dtype):
+    rng = np.random.default_rng(hash((M, K, N)) % 2 ** 31)
+    x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    codes, scale = _quant(w, 8)
+    got = pk.psi_matmul_int8(x, codes, scale, interpret=True)
+    want = ref.psi_matmul_int8_ref(x, codes, scale)
+    # bf16 outputs may differ by 1 ulp (tiled vs single-einsum f32
+    # accumulation order rounds differently at the bf16 cast)
+    tol = dict(rtol=1e-5, atol=1e-4) if dtype == jnp.float32 \
+        else dict(rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("M,K,N", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int5_kernel_vs_ref(M, K, N, dtype):
+    rng = np.random.default_rng(hash((M, K, N, 5)) % 2 ** 31)
+    x = jnp.asarray(rng.normal(size=(M, K)), dtype)
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    q = psi.quantize_weights(w, 5, axis=0)
+    planes = psi.pack_int5(q.codes)
+    scale = q.scale.reshape(-1)
+    got = pk.psi_matmul_int5(x, planes, scale, interpret=True)
+    want = ref.psi_matmul_int5_ref(x, planes, scale)
+    tol = dict(rtol=1e-5, atol=1e-4) if dtype == jnp.float32 \
+        else dict(rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_int8_kernel_block_shape_sweep():
+    """Kernel result is block-shape invariant (accumulation correctness)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(96, 160)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(160, 192)).astype(np.float32))
+    codes, scale = _quant(w, 8)
+    want = ref.psi_matmul_int8_ref(x, codes, scale)
+    for bm, bn, bk in [(32, 64, 32), (128, 128, 128), (96, 192, 160),
+                       (16, 16, 16)]:
+        got = pk.psi_matmul_int8(x, codes, scale, bm=bm, bn=bn, bk=bk,
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_int5_kernel_block_shape_sweep():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 96)).astype(np.float32))
+    q = psi.quantize_weights(w, 5, axis=0)
+    planes = psi.pack_int5(q.codes)
+    scale = q.scale.reshape(-1)
+    want = ref.psi_matmul_int5_ref(x, planes, scale)
+    for bm, bn, bk in [(32, 32, 32), (64, 96, 64), (64, 96, 128)]:
+        got = pk.psi_matmul_int5(x, planes, scale, bm=bm, bn=bn, bk=bk,
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_ops_dispatch_cpu_matches_interpret(monkeypatch):
+    """ops.psi_matmul (CPU oracle path) == forced interpret-kernel path."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 10, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
+    q = psi.quantize_weights(w, 8, axis=0)
+    leaf = {"codes": q.codes, "scale": q.scale}
+    got_ref = ops.psi_matmul(x, leaf)
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    got_kernel = ops.psi_matmul(x, leaf)
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(got_kernel),
+                               rtol=1e-5, atol=1e-4)
+    assert got_ref.shape == (4, 10, 48)
+
+
+def test_kernel_matches_float_matmul_within_quant_error():
+    """End-to-end sanity: the PSI kernel approximates the float matmul with
+    per-channel-quantization error bounds (not exactness)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(32, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    codes, scale = _quant(w, 8)
+    got = pk.psi_matmul_int8(x, codes, scale, interpret=True)
+    rel = float(jnp.linalg.norm(got - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.02

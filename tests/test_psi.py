@@ -1,0 +1,131 @@
+"""Core PSI quantization: exhaustive Table-I validation + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import psi
+
+
+class TestTable1:
+    """Paper Table I: multiplication error per number of partitions."""
+
+    def test_int5_2psi_error_set(self):
+        """INT5 with 2 PSIs errs ONLY at w in {+-11, +-13}."""
+        w = np.arange(-16, 16)
+        vals = np.asarray(psi.psi_value_table(5))
+        bad = w[vals != w]
+        assert set(bad.tolist()) == {-13, -11, 11, 13}
+
+    def test_int5_worst_case_error_is_9pct(self):
+        w = np.arange(-16, 16)
+        vals = np.asarray(psi.psi_value_table(5))
+        rel = np.abs(vals - w) / np.maximum(np.abs(w), 1)
+        assert abs(rel.max() - 1 / 11) < 1e-9          # ~9 % (paper)
+
+    def test_int8_4psi_exact(self):
+        """INT8 with 4 PSIs is exact for all of [-128, 127]."""
+        w = np.arange(-128, 128)
+        assert np.array_equal(np.asarray(psi.psi_value_table(8)), w)
+
+    def test_psi_term_budget(self):
+        """<= 2 terms for INT5, <= 4 for INT8 (the hardware register count)."""
+        for bits, n in ((5, 2), (8, 4)):
+            tab = psi._best_decomposition_table(bits)
+            nz = (tab[:, 0::2] != 0).sum(axis=1)
+            assert nz.max() <= n
+
+
+class TestDecomposeReconstruct:
+    @pytest.mark.parametrize("bits", [5, 8])
+    def test_roundtrip_matches_value_table(self, bits):
+        lo = -16 if bits == 5 else -128
+        hi = 16 if bits == 5 else 128
+        w = jnp.arange(lo, hi)
+        s, n = psi.psi_decompose_int(w, bits)
+        rec = psi.psi_reconstruct(s, n)
+        assert np.array_equal(np.asarray(rec),
+                              np.asarray(psi.psi_value_table(bits)))
+
+    @given(st.integers(-128, 127), st.integers(-128, 127))
+    @settings(max_examples=200, deadline=None)
+    def test_sam_multiply_exact_int8(self, w, x):
+        """SAM (mux + barrel shift + accumulate) == integer multiply."""
+        s, n = psi.psi_decompose_int(jnp.asarray([w]), 8)
+        got = psi.sam_multiply(jnp.asarray([x]), s, n)
+        assert int(got[0]) == w * x
+
+    @given(st.integers(-16, 15), st.integers(-128, 127))
+    @settings(max_examples=200, deadline=None)
+    def test_sam_multiply_int5_error_bound(self, w, x):
+        s, n = psi.psi_decompose_int(jnp.asarray([w]), 5)
+        got = int(psi.sam_multiply(jnp.asarray([x]), s, n)[0])
+        assert abs(got - w * x) <= abs(x)  # |w' - w| <= 1
+
+    def test_int5_multiplication_error_exhaustive(self):
+        """All (w, X) pairs: errors appear only at the Table-I weights."""
+        w = np.arange(-16, 16)
+        x = np.arange(-128, 128)
+        wp = np.asarray(psi.psi_value_table(5))
+        prod_hw = wp[:, None] * x[None, :]
+        prod = w[:, None] * x[None, :]
+        err_rows = np.unique(w[np.any(prod_hw != prod, axis=1)])
+        assert set(err_rows.tolist()) <= {-13, -11, 11, 13}
+
+
+class TestMOA:
+    """Appendix: sign-extension == 2's complement of the negative count."""
+
+    @given(st.lists(st.integers(-16, 15), min_size=1, max_size=18))
+    @settings(max_examples=200, deadline=None)
+    def test_moa_sign_trick(self, ops):
+        arr = jnp.asarray(ops)[:, None]
+        got = psi.moa_sign_extension_sum(arr, in_bits=5, out_bits=18)
+        assert int(got[0]) == sum(ops)
+
+    def test_moa18_capacity(self):
+        """18 operands of 18-PSI range fit the 18-bit MOA output."""
+        rng = np.random.default_rng(0)
+        ops = rng.integers(-(2 ** 12), 2 ** 12, size=(18, 64))
+        got = psi.moa_sign_extension_sum(jnp.asarray(ops), 13, 18)
+        assert np.array_equal(np.asarray(got), ops.sum(0))
+
+
+class TestFloatQuant:
+    def test_quantize_dequantize_error_bound(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+        for bits, tol in ((8, 0.02), (5, 0.15)):
+            q = psi.quantize_weights(w, bits, axis=0)
+            err = jnp.abs(q.dequantize() - w).max() / jnp.abs(w).max()
+            assert float(err) < tol
+
+    def test_codes_are_psi_representable(self):
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.normal(size=(40, 24)).astype(np.float32))
+        q = psi.quantize_weights(w, 5, axis=0)
+        codes = np.asarray(q.codes)
+        valid = set(np.asarray(psi.psi_value_table(5)).tolist())
+        assert set(np.unique(codes).tolist()) <= valid
+
+    def test_ste_gradient_identity(self):
+        w = jnp.ones((8, 8))
+        g = jax.grad(lambda w: psi.fake_quant_ste(w, 8, (0,)).sum())(w)
+        assert np.allclose(np.asarray(g), 1.0)
+
+    @given(st.integers(1, 4))
+    @settings(max_examples=20, deadline=None)
+    def test_pack_unpack_roundtrip(self, seed):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(-16, 16, size=(8 * seed, 16)).astype(np.int8)
+        codes = np.asarray(psi.psi_project_int(jnp.asarray(codes), 5))
+        packed = psi.pack_int5(jnp.asarray(codes))
+        assert packed.size == codes.size * 0.625
+        assert np.array_equal(np.asarray(psi.unpack_int5(packed)), codes)
+
+    def test_activation_quant_int8(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(100,)) * 3)
+        q, scale = psi.quantize_activations_int8(x)
+        err = jnp.abs(q.astype(jnp.float32) * scale - x).max()
+        assert float(err) <= float(scale) * 0.5 + 1e-6

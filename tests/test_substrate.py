@@ -1,0 +1,190 @@
+"""Substrate: data pipeline, optimizer, gradient compression, checkpointing,
+straggler monitor, elastic re-mesh planning."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import TokenStream, synthetic_mnist
+from repro.optim import adamw, cosine_schedule, sgd
+from repro.optim.compress import (compress_gradients, compressed_bytes,
+                                  decompress_gradients)
+from repro.runtime.elastic import plan_remesh
+from repro.runtime.straggler import StragglerMonitor
+
+
+class TestDataPipeline:
+    def test_deterministic(self):
+        a = next(TokenStream(1000, 32, 8, seed=7))
+        b = next(TokenStream(1000, 32, 8, seed=7))
+        assert np.array_equal(a, b)
+
+    def test_resume_exact(self):
+        s1 = TokenStream(1000, 32, 8, seed=7)
+        for _ in range(5):
+            next(s1)
+        state = s1.state_dict()
+        want = next(s1)
+        s2 = TokenStream(1000, 32, 8)
+        s2.load_state_dict(state)
+        assert np.array_equal(next(s2), want)
+
+    def test_host_sharding_partitions_batch(self):
+        full = next(TokenStream(1000, 16, 8, seed=3, host_id=0, num_hosts=1))
+        h0 = next(TokenStream(1000, 16, 8, seed=3, host_id=0, num_hosts=2))
+        h1 = next(TokenStream(1000, 16, 8, seed=3, host_id=1, num_hosts=2))
+        assert h0.shape == (4, 16) and h1.shape == (4, 16)
+        assert not np.array_equal(h0, h1)
+        assert full.shape == (8, 16)
+
+    def test_synthetic_mnist_learnable_structure(self):
+        xs, ys = synthetic_mnist(256, seed=0)
+        assert xs.shape == (256, 32, 32, 1)
+        assert set(np.unique(ys)) <= set(range(10))
+        # same-class images are more similar than cross-class ones
+        d0 = xs[ys == ys[0]]
+        other = xs[ys != ys[0]]
+        assert (np.mean([np.linalg.norm(a - d0[0]) for a in d0[1:4]])
+                < np.mean([np.linalg.norm(a - d0[0]) for a in other[:4]]))
+
+
+class TestOptim:
+    def _quad(self, opt, steps=60):
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = opt.init(params)
+        for _ in range(steps):
+            g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = opt.update(g, state, params)
+        return float(jnp.abs(params["w"]).max())
+
+    def test_adamw_converges(self):
+        assert self._quad(adamw(lr=0.1, weight_decay=0.0)) < 0.3
+
+    def test_sgd_converges(self):
+        assert self._quad(sgd(lr=0.05, momentum=0.5)) < 0.3
+
+    def test_cosine_schedule(self):
+        lr = cosine_schedule(1.0, warmup=10, total=100)
+        assert float(lr(0)) == 0.0
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(100)) == pytest.approx(0.0, abs=1e-6)
+
+    def test_clip_norm_applied(self):
+        opt = adamw(clip_norm=1.0)
+        p = {"w": jnp.zeros((3,))}
+        s = opt.init(p)
+        _, _, m = opt.update({"w": jnp.full((3,), 100.0)}, s, p)
+        assert float(m["grad_norm"]) > 1.0
+
+
+class TestGradCompression:
+    @given(st.integers(0, 10))
+    @settings(max_examples=10, deadline=None)
+    def test_roundtrip_error_bounded(self, seed):
+        rng = np.random.default_rng(seed)
+        g = {"a": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+        comp, err = compress_gradients(g)
+        rec = decompress_gradients(comp)
+        scale = float(comp["a"]["scale"])
+        assert float(jnp.abs(rec["a"] - g["a"]).max()) <= scale * 0.5 + 1e-7
+
+    def test_error_feedback_unbiased_over_steps(self):
+        """Constant gradient: error feedback makes the mean reconstructed
+        gradient converge to the true one."""
+        g = {"a": jnp.asarray(np.linspace(-1e-3, 1e-3, 32), dtype=jnp.float32)}
+        err = None
+        acc = jnp.zeros((32,))
+        for _ in range(64):
+            comp, err = compress_gradients(g, err)
+            acc = acc + decompress_gradients(comp)["a"]
+        np.testing.assert_allclose(np.asarray(acc / 64), np.asarray(g["a"]),
+                                   atol=2e-6)
+
+    def test_payload_4x_smaller(self):
+        g = {"a": jnp.zeros((1024,), jnp.float32)}
+        comp, _ = compress_gradients(g)
+        assert compressed_bytes(comp) * 3 < 1024 * 4
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+                "opt": {"m": [jnp.ones((2,)), jnp.zeros((1,))],
+                        "step": jnp.asarray(5)}}
+        mgr.save(10, tree, extra={"data": {"step": 10, "seed": 0}})
+        got, extra = mgr.restore()
+        assert extra["data"]["step"] == 10
+        np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                      np.arange(6.0).reshape(2, 3))
+        np.testing.assert_array_equal(np.asarray(got["opt"]["m"][0]),
+                                      np.ones((2,)))
+
+    def test_keep_k_rotation(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, {"x": jnp.asarray([s])})
+        assert mgr.all_steps() == [3, 4]
+
+    def test_keep_every_protects(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=1, keep_every=2)
+        for s in (1, 2, 3):
+            mgr.save(s, {"x": jnp.asarray([s])})
+        assert 2 in mgr.all_steps()
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"x": jnp.ones((128, 128))}, blocking=False)
+        mgr.wait()
+        got, _ = mgr.restore(1)
+        assert got["x"].shape == (128, 128)
+
+    def test_atomic_no_partial(self, tmp_path):
+        """tmp dirs never count as checkpoints."""
+        mgr = CheckpointManager(str(tmp_path))
+        os.makedirs(tmp_path / "tmp.99", exist_ok=True)
+        assert mgr.all_steps() == []
+
+    def test_restore_with_shardings_resharding(self, tmp_path):
+        """Elastic path: restore device_puts with the current sharding."""
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"w": jnp.arange(16.0)})
+        sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+        got, _ = mgr.restore(1, shardings={"w": sharding})
+        assert got["w"].sharding == sharding
+
+
+class TestStragglerElastic:
+    def test_straggler_flagging(self):
+        mon = StragglerMonitor(n_hosts=4, patience=2)
+        for _ in range(3):
+            rep = mon.observe([1.0, 1.0, 1.0, 2.0])
+        assert rep["flagged_hosts"] == [3]
+        assert rep["evict_recommended"]
+        w = mon.input_weights()
+        assert w[3] < w[0]
+
+    def test_no_false_positives(self):
+        mon = StragglerMonitor(n_hosts=4)
+        for _ in range(10):
+            rep = mon.observe([1.0, 1.01, 0.99, 1.02])
+        assert not rep["flagged_hosts"]
+
+    def test_plan_remesh_shrinks_data_axis(self):
+        plan = plan_remesh(240, model_parallel=16)
+        assert plan.shape == (15, 16)
+        assert plan.dropped_devices == 0
+        plan2 = plan_remesh(250, model_parallel=16)
+        assert plan2.shape == (15, 16) and plan2.dropped_devices == 10
+
+    def test_plan_remesh_multi_pod(self):
+        plan = plan_remesh(512, model_parallel=16, pods=2)
+        assert plan.shape == (2, 16, 16)
+
+    def test_plan_remesh_rejects_sub_tp(self):
+        with pytest.raises(ValueError):
+            plan_remesh(8, model_parallel=16)

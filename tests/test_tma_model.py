@@ -1,0 +1,125 @@
+"""TMA accelerator cycle/energy/SRAM model vs the paper's published numbers
+(Tables II-III, Figs. 8-9)."""
+import math
+
+import pytest
+
+from repro.core import baselines as bl, tma_model as tm
+
+
+class TestTable2:
+    def test_macs_parallel(self):
+        assert tm.MACS_PARALLEL == 2304      # 4x4x16 NEs x 9 SAMs
+
+    def test_peak_throughput(self):
+        assert tm.peak_throughput_gmacs(5, 250e6) == pytest.approx(576)
+        assert tm.peak_throughput_gmacs(8, 250e6) == pytest.approx(288)
+
+    def test_alexnet_frame_rate_order(self):
+        """Paper: 62 fps @200 MHz.  The cycle model (no DRAM/control
+        overheads) lands within ~30 %."""
+        fr8 = tm.frame_rate(tm.alexnet_layers(), 8)
+        assert 55 < fr8 < 95
+        fr5 = tm.frame_rate(tm.alexnet_layers(), 5)
+        assert fr5 > fr8          # INT5 strictly faster
+
+    def test_fifo_capacity_rationale(self):
+        assert tm.check_fifo_capacity(tm.alexnet_layers())
+
+    def test_psum_sram_fits_4mb(self):
+        need = tm.psum_sram_requirement_bytes(tm.alexnet_layers())
+        assert need <= tm.SRAM_BYTES
+
+
+class TestTable3:
+    def test_tmacs_per_watt(self):
+        assert tm.macs_per_watt(5) / 1e12 == pytest.approx(2.43, rel=0.01)
+        assert tm.macs_per_watt(8) / 1e12 == pytest.approx(1.215, rel=0.01)
+
+    def test_vs_convnet_ratio(self):
+        """Paper: ~12.7x (INT5) and ~6.4x (INT8) over ConvNet GMACs/W."""
+        conv = bl.CONVNET.gmacs_per_watt()
+        r5 = tm.macs_per_watt(5) / 1e9 / conv
+        r8 = tm.macs_per_watt(8) / 1e9 / conv
+        assert r5 == pytest.approx(12.7, rel=0.05)
+        assert r8 == pytest.approx(6.4, rel=0.05)
+
+    def test_table3_rows_complete(self):
+        rows = bl.table3_rows()
+        names = [r["name"] for r in rows]
+        assert names == ["Eyeriss", "ConvNet", "DSIP",
+                         "TMA (INT5)", "TMA (INT8)"]
+
+
+class TestFig8:
+    """Per-layer AlexNet processing-time ratios (batch 4)."""
+
+    @pytest.fixture
+    def layers(self):
+        return tm.alexnet_layers()
+
+    def _t(self, layers, name, bits):
+        rep = {r.name: r for r in tm.analyze_network(layers, bits, batch=4)}
+        return rep[name].time_s
+
+    def test_conv3_vs_eyeriss(self, layers):
+        r = (bl.EYERISS.layer_time_s(layers[2], 4)
+             / self._t(layers, "conv3", 5))
+        assert r == pytest.approx(24.6, rel=0.05)
+
+    def test_conv3_vs_dsip(self, layers):
+        r = bl.DSIP.layer_time_s(layers[2], 4) / self._t(layers, "conv3", 5)
+        assert r == pytest.approx(41.7, rel=0.05)
+
+    def test_fc1_vs_eyeriss(self, layers):
+        r5 = (bl.EYERISS.layer_time_s(layers[5], 4)
+              / self._t(layers, "fc6", 5))
+        r8 = (bl.EYERISS.layer_time_s(layers[5], 4)
+              / self._t(layers, "fc6", 8))
+        assert r5 == pytest.approx(14.9, rel=0.05)
+        assert r8 == pytest.approx(13.9, rel=0.05)
+
+    def test_conv1_int8_slower_than_eyeriss(self, layers):
+        """Paper §IV-A: TMA INT8 Conv1 is SLOWER than Eyeriss (only
+        11x11x3 of the 12x12x16 SAMs are used)."""
+        assert self._t(layers, "conv1", 8) > bl.EYERISS.layer_time_s(layers[0], 4)
+
+    def test_int8_cycle_ratios(self, layers):
+        """INT8/INT5 = ~2x for stride-1 convs, ~1.25x for Conv1 (stride 4),
+        <10% overhead for FC (paper §IV-A)."""
+        c3 = self._t(layers, "conv3", 8) / self._t(layers, "conv3", 5)
+        c1 = self._t(layers, "conv1", 8) / self._t(layers, "conv1", 5)
+        f6 = self._t(layers, "fc6", 8) / self._t(layers, "fc6", 5)
+        # "approximately twice": exact limit is (W_in+W_out)/W_in -> 2
+        assert c3 == pytest.approx(2.0, rel=0.08)
+        assert c1 == pytest.approx(1.25, rel=0.03)
+        assert f6 < 1.10
+
+
+class TestFig9:
+    def test_psum_access_reduction_conv(self):
+        """Paper: up to ~74x fewer Psum SRAM accesses in conv layers."""
+        layers = tm.alexnet_layers()[:5]
+        best = max(bl.EYERISS.psum_sram_accesses(l)
+                   / tm.psum_sram_accesses_tma(l) for l in layers)
+        assert 60 < best < 90
+
+    def test_psum_access_reduction_fc(self):
+        """Paper: up to ~240x in FC layers."""
+        layers = tm.alexnet_layers()[5:]
+        best = max(bl.EYERISS.psum_sram_accesses(l)
+                   / tm.psum_sram_accesses_tma(l) for l in layers)
+        assert 150 < best < 400
+
+
+class TestGateModel:
+    def test_total_calibrated(self):
+        g = tm.gate_count_model()
+        assert g["total"] == 294_000
+        assert g["other"] > 0                 # array fits inside the budget
+        assert g["moa18_vs_18cla_saving"] == pytest.approx(0.36)
+
+    def test_power_scaling(self):
+        assert tm.power_w(250e6) == pytest.approx(0.237)
+        assert tm.power_w(125e6) == pytest.approx(0.237 / 2)
+        assert tm.power_w(250e6, voltage=0.9) == pytest.approx(0.237 * 0.81)
