@@ -1,0 +1,91 @@
+"""Pytest bootstrap: a deterministic fallback for ``hypothesis``.
+
+The property tests (test_psi / test_substrate / test_attention_units /
+test_serving) use hypothesis when it is installed (see requirements-dev.txt).
+Some execution environments — including the hermetic container the tier-1
+suite runs in — cannot pip-install dev dependencies, and an absent
+``hypothesis`` used to kill the whole suite at collection.  This shim
+registers a minimal, deterministic stand-in implementing exactly the API the
+tests use (``given``, ``settings``, ``strategies.integers``,
+``strategies.lists``): each property runs over the strategy's boundary values
+followed by seeded-random samples, so the suite stays meaningful (if less
+adversarial than real hypothesis shrinking) and fully reproducible.
+"""
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+def _install_hypothesis_fallback():
+    class _Strategy:
+        """A sample generator: ``example(i, rng)`` yields boundary values for
+        small ``i`` and seeded-random values afterwards."""
+
+        def __init__(self, boundary, sample):
+            self._boundary = boundary      # list of deterministic examples
+            self._sample = sample          # fn(rng) -> value
+
+        def example(self, i, rng):
+            if i < len(self._boundary):
+                return self._boundary[i]
+            return self._sample(rng)
+
+    def integers(min_value, max_value):
+        bound = [min_value, max_value]
+        if min_value < 0 < max_value:
+            bound.append(0)
+        return _Strategy(bound,
+                         lambda rng: rng.randint(min_value, max_value))
+
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(2 + i, rng) for i in range(n)]
+
+        bound = [[elements.example(0, random.Random(0))] * max(min_size, 1)]
+        if min_size == 0:
+            bound.insert(0, [])
+        return _Strategy(bound, sample)
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_fallback_max_examples", 50)
+                rng = random.Random(0xC0FFEE)
+                for i in range(n):
+                    fn(*args, *(s.example(i, rng) for s in strategies),
+                       **kwargs)
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (real hypothesis rewrites the signature too).
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[:-len(strategies)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def settings(max_examples=100, deadline=None, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.lists = lists
+    mod.strategies = st_mod
+    mod.__is_repro_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when available)
+except ImportError:
+    _install_hypothesis_fallback()

@@ -1,20 +1,20 @@
-"""Batched serving with PSI-compressed weights: the paper's inference regime
-(weight traffic is the bottleneck) mapped to LM decode.
+"""Continuous-batching serving with PSI-compressed weights: the paper's
+inference regime (weight traffic is the bottleneck) mapped to LM decode.
 
-Runs the Server engine (prefill + decode loop) over a batch of requests for
-each weight format and reports the serving-weight footprint — the quantity
-the psi_matmul kernel translates into HBM-bandwidth savings on TPU.
+Runs the slot-based Server engine over an arrival trace for each weight
+format and reports the serving-weight footprint — the quantity the
+psi_matmul kernel translates into HBM-bandwidth savings on TPU.
 
   PYTHONPATH=src python examples/serve_quantized.py
 """
 import dataclasses
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core.quantizer import quantized_bytes
-from repro.launch.serve import Request, Server
+from repro.launch.scheduler import poisson_trace
+from repro.launch.serve import Server
 from repro.models import build_model
 
 
@@ -22,7 +22,6 @@ def main():
     cfg = reduced_config(get_config("chatglm3-6b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
 
     base_bytes = quantized_bytes(params)
     for quant, bits, pack in (("none", None, False), ("psi8", 8, False),
@@ -30,10 +29,10 @@ def main():
         p = params if bits is None else model.quantize(params, bits, pack=pack)
         scfg = cfg if bits is None else dataclasses.replace(
             cfg, quant_mode=quant)
-        reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=(24,))
-                        .astype(np.int32), max_new=8) for i in range(4)]
-        server = Server(scfg, p, max_seq=48)
-        done, stats = server.run_batch(reqs)
+        reqs = poisson_trace(4, rate_rps=500.0, prompt_len=24, max_new=8,
+                             vocab_size=cfg.vocab_size, seed=0)
+        server = Server(scfg, p, max_batch=4, max_seq=48)
+        done, stats = server.serve(reqs, continuous=True)
         nbytes = quantized_bytes(p)
         print(f"{quant:5s}: {stats['tok_per_s']:8.1f} tok/s (CPU), "
               f"weights {nbytes/1e6:7.2f} MB ({base_bytes/nbytes:.2f}x smaller), "

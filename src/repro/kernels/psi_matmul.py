@@ -34,6 +34,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 128
 
+# jax 0.5 renamed pltpu.TPUCompilerParams -> CompilerParams; accept both so
+# the kernels (and their interpret-mode tests) run across the 0.4/0.5 pin.
+# A future rename fails loudly here at import, not inside pallas_call.
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or pltpu.TPUCompilerParams)
+
 
 def _int8_kernel(x_ref, codes_ref, scale_ref, o_ref, acc_ref, *, k_steps):
     k = pl.program_id(2)
@@ -115,7 +121,7 @@ def psi_matmul_int8(x, codes, scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, cp, sp)
@@ -150,7 +156,7 @@ def psi_matmul_int5(x, planes, scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, pp, sp)

@@ -261,6 +261,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # jax < 0.5: per-device list of dicts
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll_dev, coll_ops = collective_bytes_per_device(hlo)
 

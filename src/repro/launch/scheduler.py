@@ -1,0 +1,206 @@
+"""Iteration-level scheduler for the continuous-batching serving engine.
+
+Orca-style continuous batching (DESIGN.md §3): the decode step is a fixed
+``(max_batch, 1)`` tensor over ``max_batch`` *slots*; the scheduler owns which
+request occupies which slot.  New requests are admitted into free slots
+mid-decode, sequences retire at EOS / their own ``max_new`` (freeing the slot
+immediately), and a FIFO waiting queue preserves arrival order.  The engine
+(``repro.launch.serve``) is the device half; this module is pure host-side
+bookkeeping — request queue, Poisson arrival simulation, slot allocation, and
+per-request latency accounting — so it is unit-testable without a model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Requests and arrival traces.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its lifecycle accounting (filled in by the
+    scheduler/engine as the request moves arrival -> admit -> retire)."""
+    rid: int
+    prompt: np.ndarray                  # (S,) int32 token ids
+    max_new: int                        # per-request generation budget
+    arrival_s: float = 0.0              # trace time the request shows up
+
+    # --- engine-filled accounting ---
+    admit_s: Optional[float] = None     # admitted into a decode slot
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    slot: Optional[int] = None          # slot the request decoded in
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def latency_s(self) -> float:
+        """Arrival -> completion (includes queueing — the p99 that matters)."""
+        return (self.finish_s or 0.0) - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Arrival -> first generated token."""
+        return (self.first_token_s or 0.0) - self.arrival_s
+
+    @property
+    def queue_s(self) -> float:
+        return (self.admit_s or 0.0) - self.arrival_s
+
+    @property
+    def out(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+
+def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
+                  max_new: int, vocab_size: int, seed: int = 0,
+                  min_new: Optional[int] = None,
+                  prompt_jitter: int = 0) -> List[Request]:
+    """Simulated open-loop arrival process: exponential inter-arrival times at
+    ``rate_rps`` requests/s, heterogeneous decode budgets in
+    ``[min_new, max_new]`` (default min_new: ``max(1, max_new // 4)``; the
+    heterogeneity is what a batch-synchronous server pays for — every
+    sequence in a static batch runs to the batch max).  Deterministic given
+    ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    min_new = max(1, max_new // 4) if min_new is None else max(1, min_new)
+    if min_new > max_new:
+        raise ValueError(f"min_new={min_new} exceeds max_new={max_new}")
+    reqs, t = [], 0.0
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        plen = prompt_len
+        if prompt_jitter:
+            plen = max(1, prompt_len + int(rng.integers(-prompt_jitter,
+                                                        prompt_jitter + 1)))
+        prompt = rng.integers(0, vocab_size, size=(plen,)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new=int(rng.integers(min_new, max_new + 1)),
+                            arrival_s=t))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Slot allocation.
+# ---------------------------------------------------------------------------
+class SlotAllocator:
+    """Fixed pool of ``n_slots`` decode slots; lowest-index-first reuse."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free = sorted(range(n_slots), reverse=True)  # pop() -> lowest
+        self.occupant: List[Optional[int]] = [None] * n_slots  # slot -> rid
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, rid: int) -> int:
+        slot = self._free.pop()
+        self.occupant[slot] = rid
+        return slot
+
+    def release(self, slot: int) -> None:
+        if self.occupant[slot] is None:
+            raise ValueError(f"slot {slot} is already free")
+        self.occupant[slot] = None
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# The scheduler proper.
+# ---------------------------------------------------------------------------
+class Scheduler:
+    """FIFO admission of arrived requests into free decode slots.
+
+    Drive it with a monotonically non-decreasing ``now`` (seconds since serve
+    start):
+
+        sched.poll(now)                  # arrivals -> waiting queue
+        for slot, req in sched.admit(now): ...prefill + insert...
+        ...run one decode step...
+        sched.retire(slot, now)          # at EOS / max_new
+    """
+
+    def __init__(self, requests: Sequence[Request], max_batch: int):
+        for r in requests:
+            if r.admit_s is not None or r.tokens:
+                raise ValueError(
+                    f"request {r.rid} was already served (accounting is "
+                    f"mutated in place); build a fresh trace per serve")
+        self._pending = deque(sorted(requests,
+                                     key=lambda r: (r.arrival_s, r.rid)))
+        self.waiting: deque = deque()
+        self.slots = SlotAllocator(max_batch)
+        self.running: Dict[int, Request] = {}       # slot -> request
+        self.finished: List[Request] = []
+
+    # ---- queue movement ----
+    def poll(self, now: float) -> int:
+        """Move requests whose arrival time has passed into the waiting
+        queue (arrival order).  Returns how many arrived."""
+        n = 0
+        while self._pending and self._pending[0].arrival_s <= now:
+            self.waiting.append(self._pending.popleft())
+            n += 1
+        return n
+
+    def admit(self, now: float) -> List[Tuple[int, Request]]:
+        """Admit waiting requests (FIFO) into free slots; returns the new
+        (slot, request) assignments for the engine to prefill + insert."""
+        admitted = []
+        while self.waiting and self.slots.free_count:
+            req = self.waiting.popleft()
+            slot = self.slots.alloc(req.rid)
+            req.slot = slot
+            req.admit_s = now
+            self.running[slot] = req
+            admitted.append((slot, req))
+        return admitted
+
+    def retire(self, slot: int, now: float) -> Request:
+        req = self.running.pop(slot)
+        req.finish_s = now
+        self.slots.release(slot)
+        self.finished.append(req)
+        return req
+
+    # ---- state queries ----
+    @property
+    def done(self) -> bool:
+        return not (self._pending or self.waiting or self.running)
+
+    def next_arrival_s(self) -> Optional[float]:
+        return self._pending[0].arrival_s if self._pending else None
+
+
+# ---------------------------------------------------------------------------
+# Metrics.
+# ---------------------------------------------------------------------------
+def summarize(requests: Sequence[Request], wall_s: float,
+              mode: str = "") -> Dict:
+    """Throughput + latency percentiles over a finished request set."""
+    if not requests:
+        return {"mode": mode, "n_requests": 0, "tokens": 0, "wall_s": wall_s,
+                "tok_per_s": 0.0, "p50_latency_s": 0.0, "p99_latency_s": 0.0,
+                "p50_ttft_s": 0.0, "p99_ttft_s": 0.0}
+    lats = np.asarray([r.latency_s for r in requests])
+    ttfts = np.asarray([r.ttft_s for r in requests])
+    tokens = int(sum(len(r.tokens) for r in requests))
+    return {
+        "mode": mode,
+        "n_requests": len(requests),
+        "tokens": tokens,
+        "wall_s": wall_s,
+        "tok_per_s": tokens / wall_s if wall_s else float("inf"),
+        "p50_latency_s": float(np.percentile(lats, 50)),
+        "p99_latency_s": float(np.percentile(lats, 99)),
+        "p50_ttft_s": float(np.percentile(ttfts, 50)),
+        "p99_ttft_s": float(np.percentile(ttfts, 99)),
+    }

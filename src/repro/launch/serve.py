@@ -1,96 +1,318 @@
-"""Batched serving driver: continuous-batching loop over PSI-quantized
-weights (the paper's inference regime, scaled to LM decode).
+"""Continuous-batching serving engine over PSI-quantized weights.
 
-Requests arrive with prompts; the scheduler packs up to ``max_batch`` active
-sequences, prefills new arrivals, and decodes the active set step by step,
-retiring sequences at EOS/limit.  The decode step runs entirely on the PSI
-serving format — on TPU the psi_matmul Pallas kernel reads 5/8-bit weights
-from HBM (DESIGN.md §2).
+The engine owns ``max_batch`` decode *slots* backed by one fixed-length
+batched KV cache.  A slot-based scheduler (``repro.launch.scheduler``) admits
+arriving requests into free slots mid-decode, retires sequences at EOS /
+``max_new`` (freeing the slot immediately for the next arrival), and the
+engine interleaves prefill of admissions with ongoing decode steps.  The
+jitted decode step is shape-stable — a fixed ``(max_batch, 1)`` token tensor
+plus an active-slot mask that freezes the cache rows of free slots — so XLA
+compiles it exactly once per serve lifetime (DESIGN.md §3).  The decode step
+runs entirely on the PSI serving format — on TPU the psi_matmul Pallas kernel
+reads 5/8-bit weights from HBM (DESIGN.md §2).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \
-      --quant psi8 --requests 6 --max-new 16
+A batch-synchronous ("static") mode runs the same machinery with admission
+barriered until every slot drains — the baseline ``benchmarks/serve_bench.py``
+measures continuous batching against.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \\
+      --quant psi8 --requests 32 --max-batch 4 --arrival-rate 1000 \\
+      --max-new 48 --mode both
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.data.pipeline import make_batch_for
+from repro.launch.scheduler import (Request, Scheduler, poisson_trace,
+                                    summarize)
 from repro.models import build_model
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray              # (S,) int32
-    max_new: int
-    out: Optional[np.ndarray] = None
-    latency_s: float = 0.0
+# Prompt lengths are rounded up to a multiple of this before prefill so the
+# number of compiled prefill shapes is bounded (attention caches mask the pad
+# slots out via true_lens; recurrent families prefill at exact length).
+PREFILL_BUCKET = 16
 
 
 class Server:
-    """Static-batch serving engine (prefill + decode loop)."""
+    """Slot-based serving engine: continuous or batch-synchronous scheduling
+    over one shape-stable jitted decode step (DESIGN.md §3)."""
 
-    def __init__(self, cfg, params, max_seq: int = 256):
+    def __init__(self, cfg, params, max_batch: int = 4, max_seq: int = 256,
+                 eos_id: int = -1, bucket: int = PREFILL_BUCKET):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
+        self.max_batch = max_batch
         self.max_seq = max_seq
-        self._decode = jax.jit(self.model.decode_step)
-        self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(p, b, cache_len=max_seq))
+        self.eos_id = eos_id
+        self.bucket = bucket
+        # Recurrent state absorbs pad tokens, so SSM/hybrid (and whisper's
+        # decoder) prefill at exact prompt length instead of padded buckets.
+        self._pad_ok = cfg.family not in ("ssm", "hybrid", "encdec")
+        self._swa_window = (cfg.window if cfg.attn_type == "swa" else 0)
+        # actual KV ring extent (init_kv_cache caps SWA caches at the window)
+        self._ring_extent = (min(max_seq, self._swa_window)
+                             if self._swa_window else max_seq)
+        # The engine cache argument is donated everywhere: the serve loop
+        # rebinds it after every call, and in-place updates spare a full
+        # cache copy per decode step / admission (CPU and TPU both honor
+        # donation for these aliasable update patterns).
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(4,))
+        # burst admission: scatter every valid row of a batched prefill cache
+        # into its slot in ONE jitted call (XLA aliases the row updates into
+        # a single cache copy instead of max_batch sequential ones).
+        self._insert_burst = jax.jit(self._insert_burst_fn,
+                                     donate_argnums=(0,))
+        # steady-state single admission: prefill + slot insertion fused into
+        # one dispatch (one host sync per admission instead of two).
+        self._prefill_insert = jax.jit(self._prefill_insert_fn,
+                                       donate_argnums=(3,))
 
-    def run_batch(self, requests: List[Request], greedy: bool = True):
-        cfg = self.cfg
-        B = len(requests)
-        S = max(len(r.prompt) for r in requests)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(requests):          # left-pad-free simple pack
-            toks[i, :len(r.prompt)] = r.prompt
-        batch = make_batch_for(cfg, B, S, jax.random.PRNGKey(0))
-        batch["tokens"] = jnp.asarray(toks)
-        t0 = time.time()
-        logits, cache = self._prefill(self.params, batch)
-        new_tokens = [[] for _ in range(B)]
-        cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        max_new = max(r.max_new for r in requests)
-        for step in range(max_new):
-            pos = jnp.full((B, 1), S + step, jnp.int32)
-            db = {"token": cur, "pos": pos}
-            if cfg.rope == "mrope":
-                db["positions"] = jnp.broadcast_to(pos[:, None, :], (B, 3, 1))
-            logits, cache = self._decode(self.params, db, cache)
-            for i in range(B):
-                if step < requests[i].max_new:
-                    new_tokens[i].append(int(cur[i, 0]))
-            cur = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        dt = time.time() - t0
-        for i, r in enumerate(requests):
-            r.out = np.asarray(new_tokens[i], np.int32)
-            r.latency_s = dt
-        return requests, {"batch": B, "prefill_len": S,
-                          "decode_steps": max_new, "wall_s": dt,
-                          "tok_per_s": B * max_new / dt}
+    # ------------------------------------------------------------ jitted fns
+    def _prefill_fn(self, params, tokens, true_lens):
+        """(B, Sb) right-padded prompts -> (first greedy token (B,), cache)."""
+        B, S = tokens.shape
+        batch = {"tokens": tokens}
+        if self.cfg.rope == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            batch["positions"] = jnp.broadcast_to(pos[:, None], (B, 3, S))
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (B, self.cfg.enc_frames, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        logits, cache = self.model.prefill(params, batch,
+                                           cache_len=self.max_seq,
+                                           true_lens=true_lens)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _decode_fn(self, params, token, pos, active, cache):
+        """One masked decode step over all slots; greedy next token (B,)."""
+        batch = {"token": token, "pos": pos, "active": active}
+        if self.cfg.rope == "mrope":
+            batch["positions"] = jnp.broadcast_to(
+                pos[:, None, :], (pos.shape[0], 3, 1))
+        logits, cache = self.model.decode_step(params, batch, cache)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _prefill_insert_fn(self, params, tokens, true_lens, cache, slot):
+        """Fused single-admission path: prefill one sequence and write its
+        cache straight into ``slot``."""
+        first, seq_cache = self._prefill_fn(params, tokens, true_lens)
+        return first, self.model.insert_cache(cache, seq_cache, slot)
+
+    def _insert_burst_fn(self, cache, seq_cache, slots, valid):
+        """Insert row i of ``seq_cache`` into slot ``slots[i]`` for every i
+        with ``valid[i]`` (both (max_batch,), traced)."""
+        for i in range(self.max_batch):
+            row = self.model.slice_cache(seq_cache, jnp.int32(i))
+            updated = self.model.insert_cache(cache, row, slots[i])
+            cache = jax.tree_util.tree_map(
+                lambda new, old, i=i: jnp.where(valid[i], new, old),
+                updated, cache)
+        return cache
+
+    # -------------------------------------------------------------- plumbing
+    def _bucket_len(self, n: int) -> int:
+        if not self._pad_ok:
+            return n
+        sb = -(-n // self.bucket) * self.bucket
+        # Sliding-window ring cache: pad positions past the ring extent
+        # (min(window, max_seq)) would evict *real* prompt tokens from the
+        # tail window, so fall back to the exact length whenever the padded
+        # prompt would overrun it.
+        if self._swa_window and sb > self._ring_extent:
+            return n
+        return sb
+
+    def _prefill_admits(self, cache, admits: Sequence[Tuple[int, Request]]):
+        """Prefill newly admitted requests and insert each into its slot.
+
+        A single admission (the continuous steady state) runs a (1, Sb)
+        prefill; a burst (static mode / startup) pads the batch dimension to
+        ``max_batch`` and prefills all rows at once, so both engines pay one
+        compile per prompt bucket for each of the two batch shapes.
+        Returns the first greedy token per admission, aligned with `admits`.
+        """
+        lens = [len(r.prompt) for _, r in admits]
+        sb = self._bucket_len(max(lens))
+        if not self._swa_window and not self.cfg.is_attention_free:
+            # Full-attention cache extent: a longer prefill — or a decode
+            # that runs past max_seq — would wrap the ring and silently
+            # evict prompt tokens the causal mask still expects.  (SWA is
+            # exempt — rolling the window is its defined semantics — and so
+            # are attention-free SSMs, whose state is constant-size.)
+            need = max(sb, *(len(r.prompt) + r.max_new for _, r in admits))
+            if need > self.max_seq:
+                raise ValueError(
+                    f"request needs cache extent {need} (bucketed prompt + "
+                    f"max_new) but Server was built with max_seq="
+                    f"{self.max_seq}; size the Server for the longest "
+                    f"request")
+        # Right-padding a shorter row to sb is only safe when the pads are
+        # maskable: never for recurrent state (_pad_ok False), and not for a
+        # SWA ring the padded length would overrun (real tokens of shorter
+        # rows would roll out of the window).  Otherwise, one per request.
+        pad_safe = self._pad_ok and not (self._swa_window
+                                         and sb > self._ring_extent)
+        if len(set(lens)) > 1 and not pad_safe:
+            firsts = []
+            for slot, req in admits:
+                f, cache = self._prefill_admits(cache, [(slot, req)])
+                firsts.extend(f)
+            return firsts, cache
+        B = 1 if len(admits) == 1 else self.max_batch
+        toks = np.zeros((B, sb), np.int32)
+        tl = np.ones((B,), np.int32)
+        for i, (_, req) in enumerate(admits):
+            toks[i, :len(req.prompt)] = req.prompt
+            tl[i] = len(req.prompt)
+        if len(admits) == 1:                     # fused prefill + insert
+            slot = admits[0][0]
+            first, cache = self._prefill_insert(
+                self.params, jnp.asarray(toks), jnp.asarray(tl), cache,
+                jnp.int32(slot))
+            return [int(first[0])], cache
+        first, seq_cache = self._prefill(self.params, jnp.asarray(toks),
+                                         jnp.asarray(tl))
+        first = np.asarray(first)
+        slots = np.zeros((self.max_batch,), np.int32)
+        valid = np.zeros((self.max_batch,), bool)
+        for i, (slot, _) in enumerate(admits):
+            slots[i] = slot
+            valid[i] = True
+        cache = self._insert_burst(cache, seq_cache, jnp.asarray(slots),
+                                   jnp.asarray(valid))
+        return [int(first[i]) for i in range(len(admits))], cache
+
+    def warmup(self, requests: Sequence[Request]) -> None:
+        """Compile every shape the trace will need (per prompt bucket: the
+        fused single-admission prefill+insert and the max_batch burst
+        prefill + row insert, plus the decode step) against a throwaway
+        cache, so serving measures steady-state latency, not XLA."""
+        buckets = sorted({self._bucket_len(len(r.prompt)) for r in requests})
+        cache = self.model.init_cache(self.max_batch, self.max_seq,
+                                      dtype=jnp.dtype(self.cfg.dtype))
+        for sb in buckets:
+            # single admission: fused prefill+insert (the only B=1 path)
+            toks1 = jnp.zeros((1, sb), jnp.int32)
+            tl1 = jnp.ones((1,), jnp.int32)
+            _, cache = jax.block_until_ready(self._prefill_insert(
+                self.params, toks1, tl1, cache, jnp.int32(0)))
+            if self.max_batch > 1:
+                # admission burst: batched prefill + one scatter insert
+                toksB = jnp.zeros((self.max_batch, sb), jnp.int32)
+                tlB = jnp.ones((self.max_batch,), jnp.int32)
+                _, seq_cache = jax.block_until_ready(
+                    self._prefill(self.params, toksB, tlB))
+                slots = jnp.arange(self.max_batch, dtype=jnp.int32)
+                cache = self._insert_burst(
+                    cache, seq_cache, slots,
+                    jnp.zeros((self.max_batch,), bool))
+        tok = jnp.zeros((self.max_batch, 1), jnp.int32)
+        act = jnp.zeros((self.max_batch,), bool)
+        jax.block_until_ready(
+            self._decode(self.params, tok, tok, act, cache))
+
+    # ------------------------------------------------------------- the loop
+    def serve(self, requests: Sequence[Request], continuous: bool = True,
+              warmup: bool = True):
+        """Serve an arrival trace; returns (finished requests, stats).
+
+        ``continuous=False`` barriers admission until all slots are free —
+        classic batch-synchronous serving over the identical jitted step, so
+        benchmark deltas isolate the scheduling policy.  Arrival times are
+        interpreted on the wall clock, starting when this call begins.
+        """
+        clock = time.perf_counter
+        if not (self._swa_window or self.cfg.is_attention_free):
+            # fail fast, before any request is served/mutated, rather than
+            # aborting mid-run at admission time
+            bad = [r.rid for r in requests
+                   if max(self._bucket_len(len(r.prompt)),
+                          len(r.prompt) + r.max_new) > self.max_seq]
+            if bad:
+                raise ValueError(
+                    f"requests {bad} need more cache than max_seq="
+                    f"{self.max_seq} (bucketed prompt + max_new); size the "
+                    f"Server for the longest request")
+        if warmup:
+            self.warmup(requests)
+        sched = Scheduler(requests, self.max_batch)
+        cache = self.model.init_cache(self.max_batch, self.max_seq,
+                                      dtype=jnp.dtype(self.cfg.dtype))
+        B = self.max_batch
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B, 1), np.int32)
+        act = np.zeros((B,), bool)
+        steps = 0
+        t0 = clock()
+        while not sched.done:
+            now = clock() - t0
+            sched.poll(now)
+            if continuous or not sched.running:
+                admits = sched.admit(now)
+                if admits:
+                    firsts, cache = self._prefill_admits(cache, admits)
+                    now = clock() - t0
+                    for (slot, req), first in zip(admits, firsts):
+                        req.first_token_s = now
+                        req.tokens.append(first)
+                        if first == self.eos_id or req.max_new <= 1:
+                            sched.retire(slot, now)
+                            continue
+                        tok[slot, 0] = first
+                        pos[slot, 0] = len(req.prompt)
+                        act[slot] = True
+            if not sched.running:
+                if sched.waiting:
+                    continue   # slots free (instant retirements): re-admit
+                nxt = sched.next_arrival_s()
+                if nxt is None:
+                    break                      # everything drained
+                wait = nxt - (clock() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 0.005))
+                continue
+            new_tok, cache = self._decode(self.params, jnp.asarray(tok),
+                                          jnp.asarray(pos), jnp.asarray(act),
+                                          cache)
+            new_tok = np.asarray(new_tok)
+            steps += 1
+            now = clock() - t0
+            for slot in list(sched.running):
+                req = sched.running[slot]
+                t = int(new_tok[slot])
+                req.tokens.append(t)
+                pos[slot, 0] += 1
+                if t == self.eos_id or len(req.tokens) >= req.max_new:
+                    act[slot] = False
+                    sched.retire(slot, now)
+                else:
+                    tok[slot, 0] = t
+        wall = clock() - t0
+        stats = summarize(sched.finished, wall,
+                          mode="continuous" if continuous else "static")
+        stats["decode_steps"] = steps
+        stats["decode_compiles"] = self.decode_cache_size()
+        return sched.finished, stats
+
+    # jit-cache introspection for the shape-stability tests / stats
+    def decode_cache_size(self) -> int:
+        # _cache_size is a private jax API; degrade to -1 (unknown) rather
+        # than fail the stats path if an upgrade removes it.
+        return getattr(self._decode, "_cache_size", lambda: -1)()
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--quant", default="psi8",
-                    choices=["none", "psi5", "psi8"])
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    args = ap.parse_args()
-
+def build_server(args) -> Tuple[Server, object]:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
@@ -100,17 +322,73 @@ def main():
         bits = int(args.quant[-1])
         params = model.quantize(params, bits, pack=(bits == 5))
         cfg = dataclasses.replace(cfg, quant_mode=args.quant)
-    rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
-                                    size=(args.prompt_len,)).astype(np.int32),
-                    args.max_new)
-            for i in range(args.requests)]
-    server = Server(cfg, params,
-                    max_seq=args.prompt_len + args.max_new + 8)
-    done, stats = server.run_batch(reqs)
-    print(f"served {len(done)} requests: {stats}")
-    for r in done[:2]:
-        print(f"  req {r.rid}: {r.out[:12]}...")
+    # Cache extent must cover the *bucketed* prefill plus the decode budget,
+    # or the ring layout would silently drop the prompt head.
+    longest = args.prompt_len + args.prompt_jitter
+    prompt_pad = -(-longest // PREFILL_BUCKET) * PREFILL_BUCKET
+    server = Server(cfg, params, max_batch=args.max_batch,
+                    max_seq=prompt_pad + args.max_new + 8,
+                    eos_id=args.eos_id)
+    return server, cfg
+
+
+def trace_from_args(args, cfg):
+    """One arrival trace from the shared CLI flags (used by both the serve
+    CLI and benchmarks/serve_bench so the two can never drift)."""
+    return poisson_trace(args.requests, rate_rps=args.arrival_rate,
+                         prompt_len=args.prompt_len,
+                         max_new=args.max_new, min_new=args.min_new,
+                         prompt_jitter=args.prompt_jitter,
+                         vocab_size=cfg.vocab_size, seed=args.seed)
+
+
+def add_serve_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--quant", default="psi8",
+                    choices=["none", "psi5", "psi8"])
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="decode slots (the fixed decode batch dimension)")
+    ap.add_argument("--arrival-rate", type=float, default=1000.0,
+                    help="Poisson arrival rate, requests/s (the reduced CPU "
+                         "model decodes ~3k tok/s, so this saturates it)")
+    ap.add_argument("--max-new", type=int, default=48,
+                    help="per-request decode budgets are drawn from "
+                         "[min-new, max-new]")
+    ap.add_argument("--min-new", type=int, default=1)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--prompt-jitter", type=int, default=0,
+                    help="+- this many tokens of per-request prompt-length "
+                         "variation (exercises heterogeneous admission)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="-1 disables EOS retirement")
+    ap.add_argument("--seed", type=int, default=0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    add_serve_args(ap)
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "static", "both"])
+    args = ap.parse_args()
+
+    server, cfg = build_server(args)
+    modes = (["continuous", "static"] if args.mode == "both"
+             else [args.mode])
+    for mode in modes:
+        trace = trace_from_args(args, cfg)
+        done, stats = server.serve(trace, continuous=(mode == "continuous"))
+        print(f"[{mode}] served {stats['n_requests']} requests: "
+              f"{stats['tokens']} tokens in {stats['wall_s']:.3f}s = "
+              f"{stats['tok_per_s']:.1f} tok/s | "
+              f"latency p50 {stats['p50_latency_s'] * 1e3:.0f}ms "
+              f"p99 {stats['p99_latency_s'] * 1e3:.0f}ms | "
+              f"ttft p50 {stats['p50_ttft_s'] * 1e3:.0f}ms | "
+              f"decode compiles {stats['decode_compiles']}")
+        for r in done[:2]:
+            print(f"  req {r.rid}: slot {r.slot}, {len(r.tokens)} tokens, "
+                  f"{r.out[:10].tolist()}...")
 
 
 if __name__ == "__main__":

@@ -158,7 +158,22 @@ def _kv_dequantize(q, scale, dtype):
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
-def decode_attention_block(p, x, cfg, positions, cache):
+def _masked_row_write(buf, bidx, slot, new_val, active):
+    """Write ``new_val`` into ``buf[b, slot[b]]`` only where ``active[b]``.
+
+    Used by continuous batching (DESIGN.md §3): free/retired decode slots
+    run through the jitted step for shape stability, but their cache rows
+    must stay frozen so an admitted sequence's prefilled state is the only
+    thing a slot ever holds.
+    """
+    if active is None:
+        return buf.at[bidx, slot].set(new_val)
+    mask = active.reshape(active.shape[0], *([1] * (new_val.ndim - 1)))
+    old = buf[bidx, slot]
+    return buf.at[bidx, slot].set(jnp.where(mask, new_val, old))
+
+
+def decode_attention_block(p, x, cfg, positions, cache, active=None):
     """Single-token decode with a (ring-buffer when windowed) KV cache.
 
     cache: {"k","v": (B, C, Hkv, D), "k_pos": (B, C) int32 (-1 = empty)}
@@ -166,30 +181,37 @@ def decode_attention_block(p, x, cfg, positions, cache):
     "k_scale"/"v_scale" (B, C, Hkv, 1) f32: halves the decode-dominant
     HBM read (beyond-paper; EXPERIMENTS.md §Perf).
     ``positions`` is the absolute position of the new token, (B, 1) (or
-    (B, 3, 1) for mrope).  Returns (y, new_cache).
+    (B, 3, 1) for mrope).  ``active`` is an optional (B,) bool mask: rows
+    where it is False compute a (discarded) output but leave the cache
+    untouched — the masked-decode contract of the serving engine
+    (DESIGN.md §3).  Returns (y, new_cache).
     """
     q, k_new, v_new = _project_qkv(p, x, cfg, positions)
     pos1d = positions[:, 0] if positions.ndim == 3 else positions   # (B,1)
     C = cache["k"].shape[1]
     slot = pos1d[:, 0] % C                                          # ring slot
     bidx = jnp.arange(x.shape[0])
-    k_pos = cache["k_pos"].at[bidx, slot].set(pos1d[:, 0])
+    k_pos = _masked_row_write(cache["k_pos"], bidx, slot, pos1d[:, 0], active)
     if "k_scale" in cache:
         kq, ks = _kv_quantize(k_new[:, 0])
         vq, vs = _kv_quantize(v_new[:, 0])
         new_cache = {
-            "k": cache["k"].at[bidx, slot].set(kq),
-            "v": cache["v"].at[bidx, slot].set(vq),
-            "k_scale": cache["k_scale"].at[bidx, slot].set(ks),
-            "v_scale": cache["v_scale"].at[bidx, slot].set(vs),
+            "k": _masked_row_write(cache["k"], bidx, slot, kq, active),
+            "v": _masked_row_write(cache["v"], bidx, slot, vq, active),
+            "k_scale": _masked_row_write(cache["k_scale"], bidx, slot, ks,
+                                         active),
+            "v_scale": _masked_row_write(cache["v_scale"], bidx, slot, vs,
+                                         active),
             "k_pos": k_pos,
         }
         k = _kv_dequantize(new_cache["k"], new_cache["k_scale"], x.dtype)
         v = _kv_dequantize(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:
         new_cache = {
-            "k": cache["k"].at[bidx, slot].set(k_new[:, 0]),
-            "v": cache["v"].at[bidx, slot].set(v_new[:, 0]),
+            "k": _masked_row_write(cache["k"], bidx, slot, k_new[:, 0],
+                                   active),
+            "v": _masked_row_write(cache["v"], bidx, slot, v_new[:, 0],
+                                   active),
             "k_pos": k_pos,
         }
         k, v = new_cache["k"], new_cache["v"]

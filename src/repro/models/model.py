@@ -146,8 +146,17 @@ class Model:
                                          dtype)
         return cache
 
-    def prefill(self, params, batch, cache_len=None):
-        """Forward the prompt, return (last-token logits, decode cache)."""
+    def prefill(self, params, batch, cache_len=None, true_lens=None):
+        """Forward the prompt, return (last-token logits, decode cache).
+
+        ``true_lens`` (B,) int32 supports right-padded prompts (the serving
+        engine's bucketed prefill, DESIGN.md §3): last-token logits are
+        gathered at ``true_lens - 1`` and KV slots past the true length are
+        marked empty (k_pos = -1) so decode attention never sees pad keys.
+        Only attention caches can be pad-masked post-hoc — recurrent
+        (rg-lru / mamba) state absorbs pad tokens, so the engine prefills
+        those families at exact lengths.
+        """
         cfg = self.cfg
         S = batch["tokens"].shape[1]
         cache_len = cache_len or S
@@ -156,10 +165,19 @@ class Model:
         cache = {"kv": _states_to_cache(cfg, states, S, cache_len)}
         if cfg.family == "encdec":
             cache["enc_out"] = enc_out
-        return logits[:, -1], cache
+        if true_lens is None:
+            return logits[:, -1], cache
+        B = logits.shape[0]
+        last = logits[jnp.arange(B), true_lens - 1]
+        cache["kv"] = _mask_padded_kv(cache["kv"], true_lens)
+        return last, cache
 
     def decode_step(self, params, batch, cache):
-        """batch: {"token": (B,1), "pos": (B,1) or "positions": (B,3,1)}."""
+        """batch: {"token": (B,1), "pos": (B,1) or "positions": (B,3,1),
+        optional "active": (B,) bool}.  Rows with ``active`` False compute a
+        throwaway logit but leave their cache/state rows untouched — the
+        masked-decode contract that lets the continuous-batching engine keep
+        the jitted step shape-stable over free slots (DESIGN.md §3)."""
         cfg = self.cfg
         token = batch["token"]
         B = token.shape[0]
@@ -170,12 +188,34 @@ class Model:
                 positions, cfg.d_model, jnp.dtype(cfg.dtype))
         enc_out = cache.get("enc_out")
         x, new_kv = transformer.apply_decoder_stack_decode(
-            params["stack"], x, cfg, positions, cache["kv"], enc_kv=enc_out)
+            params["stack"], x, cfg, positions, cache["kv"], enc_kv=enc_out,
+            active=batch.get("active"))
         x = layers.apply_norm(params["norm_f"], x, cfg)
         logits = self._logits(params, x)
         new_cache = dict(cache)
         new_cache["kv"] = new_kv
         return logits[:, 0], new_cache
+
+    def slice_cache(self, cache, row):
+        """Batch row ``row`` of a batched cache as a batch-1 cache (the
+        counterpart of ``insert_cache`` for splitting batched prefills)."""
+        out = {"kv": transformer.slice_stack_cache(cache["kv"], row)}
+        if "enc_out" in cache:
+            out["enc_out"] = jax.lax.dynamic_slice_in_dim(
+                cache["enc_out"], row, 1, axis=0)
+        return out
+
+    def insert_cache(self, cache, seq_cache, slot):
+        """Admit one prefilled sequence (batch-1 ``seq_cache``) into row
+        ``slot`` of the engine's batched decode cache (DESIGN.md §3).
+        ``slot`` may be traced, so one jitted insertion covers all slots."""
+        new_cache = dict(cache)
+        new_cache["kv"] = transformer.insert_stack_cache(
+            cache["kv"], seq_cache["kv"], slot)
+        if "enc_out" in cache:
+            new_cache["enc_out"] = cache["enc_out"].at[slot].set(
+                seq_cache["enc_out"][0].astype(cache["enc_out"].dtype))
+        return new_cache
 
 
 def _ring_layout(arr, S, C):
@@ -226,6 +266,26 @@ def _states_to_cache(cfg, states, S, cache_len):
         new_g[f"b{i}"] = conv(kind, g_states[f"b{i}"], stacked=True)
     new_t = [conv(kind, st, stacked=False)
              for kind, st in zip(tail_kinds, t_states)]
+    return (new_g, new_t)
+
+
+def _mask_padded_kv(kv_cache, true_lens):
+    """Mark prefilled KV slots whose absolute position is past the true
+    prompt length as empty (k_pos = -1).  Positions are absolute, so this is
+    layout-independent (works for padded and SWA-rolled ring caches alike)."""
+    g_cache, t_cache = kv_cache
+
+    def fix(st, stacked):
+        if not isinstance(st, dict) or "k_pos" not in st:
+            return st
+        tl = true_lens.reshape((1, -1, 1) if stacked else (-1, 1))
+        st = dict(st)
+        st["k_pos"] = jnp.where(
+            (st["k_pos"] >= 0) & (st["k_pos"] < tl), st["k_pos"], -1)
+        return st
+
+    new_g = {k: fix(v, stacked=True) for k, v in g_cache.items()}
+    new_t = [fix(v, stacked=False) for v in t_cache]
     return (new_g, new_t)
 
 

@@ -75,22 +75,41 @@ def apply_block(p, x, cfg, kind, positions, enc_kv=None):
     return x, state, aux
 
 
-def apply_block_decode(p, x, cfg, kind, positions, cache, enc_kv=None):
-    """One-token decode block.  Returns (x, new_cache)."""
+def _freeze_inactive_state(new_state, old_state, active):
+    """Keep recurrent (rg-lru / mamba) state rows frozen where ``active`` is
+    False — the masked-decode contract for continuous batching (DESIGN.md §3).
+    State leaves all carry batch on axis 0 at block level."""
+    if active is None:
+        return new_state
+
+    def sel(n, o):
+        mask = active.reshape(active.shape[0], *([1] * (n.ndim - 1)))
+        return jnp.where(mask, n, o)
+
+    return jax.tree_util.tree_map(sel, new_state, old_state)
+
+
+def apply_block_decode(p, x, cfg, kind, positions, cache, enc_kv=None,
+                       active=None):
+    """One-token decode block.  Returns (x, new_cache).  ``active`` (B,) bool
+    masks cache/state mutation per batch row (None = all rows live)."""
     h = layers.apply_norm(p["norm1"], x, cfg)
     if kind in ("attn", "xattn"):
         y, cache = attention.decode_attention_block(p["attn"], h, cfg,
-                                                    positions, cache)
+                                                    positions, cache,
+                                                    active=active)
         x = x + y
         if kind == "xattn":
             hx = layers.apply_norm(p["norm_x"], x, cfg)
             ekv = attention.project_enc_kv(p["xattn"], enc_kv, cfg)
             x = x + attention.cross_attention_block(p["xattn"], hx, cfg, ekv)
     elif kind == "rec":
-        y, cache = rglru.rglru_decode_step(p["rec"], h, cfg, cache)
+        y, new_cache = rglru.rglru_decode_step(p["rec"], h, cfg, cache)
+        cache = _freeze_inactive_state(new_cache, cache, active)
         x = x + y
     elif kind == "mamba":
-        y, cache = ssm.mamba_decode_step(p["mamba"], h, cfg, cache)
+        y, new_cache = ssm.mamba_decode_step(p["mamba"], h, cfg, cache)
+        cache = _freeze_inactive_state(new_cache, cache, active)
         x = x + y
     if kind != "mamba":
         h2 = layers.apply_norm(p["norm2"], x, cfg)
@@ -202,9 +221,11 @@ def apply_decoder_stack(p, x, cfg, positions, enc_kv=None, collect_cache=False):
     return x, (states, tail_states) if collect_cache else None, aux
 
 
-def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None):
+def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None,
+                               active=None):
     """cache = (group_cache_stacked, tail_cache_list) as produced by
-    ``init_stack_cache``.  Returns (x, new_cache)."""
+    ``init_stack_cache``.  ``active`` (B,) bool gates cache writes per row
+    (continuous batching; DESIGN.md §3).  Returns (x, new_cache)."""
     group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
     g_cache, t_cache = cache
 
@@ -213,14 +234,16 @@ def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None):
         new_c = {}
         for i, kind in enumerate(group_kinds):
             x, nc = apply_block_decode(gp[f"b{i}_{kind}"], x, cfg, kind,
-                                       positions, gc[f"b{i}"], enc_kv)
+                                       positions, gc[f"b{i}"], enc_kv,
+                                       active=active)
             new_c[f"b{i}"] = nc
         return x, new_c
 
     x, new_g_cache = jax.lax.scan(body, x, (p["groups"], g_cache))
     new_t = []
     for tp, kind, tc in zip(p["tail"], tail_kinds, t_cache):
-        x, nc = apply_block_decode(tp, x, cfg, kind, positions, tc, enc_kv)
+        x, nc = apply_block_decode(tp, x, cfg, kind, positions, tc, enc_kv,
+                                   active=active)
         new_t.append(nc)
     return x, (new_g_cache, new_t)
 
@@ -240,6 +263,41 @@ def init_stack_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
         lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), g)
     t = [one(kind) for kind in tail_kinds]
     return (g, t)
+
+
+def slice_stack_cache(cache, row):
+    """Extract batch row ``row`` of a batched cache as a batch-1 cache
+    (grouped leaves: batch axis 1; tail leaves: axis 0).  The engine uses it
+    to split a batched prefill into per-slot insertions; ``row`` may be
+    traced."""
+    g_cache, t_cache = cache
+    new_g = jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=1), g_cache)
+    new_t = jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, row, 1, axis=0), t_cache)
+    return (new_g, new_t)
+
+
+def insert_stack_cache(cache, seq_cache, slot):
+    """Write a single sequence's cache into row ``slot`` of a batched cache.
+
+    ``seq_cache`` is a batch-1 cache (the output of ``Model.prefill`` on one
+    request); ``cache`` is the engine's persistent (max_batch, ...) decode
+    cache with identical tree structure.  Grouped leaves carry batch on
+    axis 1 (behind the scanned group axis), tail leaves on axis 0 — this is
+    the per-slot cache insertion primitive of the continuous-batching engine
+    (DESIGN.md §3).  ``slot`` may be a traced int32 scalar, so one jitted
+    insertion serves every slot without recompiling.
+    """
+    g_cache, t_cache = cache
+    sg_cache, st_cache = seq_cache
+    new_g = jax.tree_util.tree_map(
+        lambda big, small: big.at[:, slot].set(small[:, 0].astype(big.dtype)),
+        g_cache, sg_cache)
+    new_t = jax.tree_util.tree_map(
+        lambda big, small: big.at[slot].set(small[0].astype(big.dtype)),
+        t_cache, st_cache)
+    return (new_g, new_t)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,227 @@
+"""Continuous-batching serving engine tests: scheduler invariants (pure
+host-side), engine-level slot reuse / EOS retirement, decode-step shape
+stability (no recompiles), and the INT5 bit-plane round-trip property."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.core import psi
+from repro.launch.scheduler import (Request, Scheduler, SlotAllocator,
+                                    poisson_trace)
+from repro.launch.serve import Server
+from repro.models import build_model
+
+
+def _requests(specs):
+    """specs: list of (arrival_s, max_new)."""
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, prompt=rng.integers(0, 256, size=(8,))
+                    .astype(np.int32), max_new=mn, arrival_s=at)
+            for i, (at, mn) in enumerate(specs)]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants (no model involved).
+# ---------------------------------------------------------------------------
+class TestScheduler:
+    def test_admission_follows_arrival_order(self):
+        """Requests are admitted FIFO by arrival time, not submission order."""
+        reqs = _requests([(0.3, 4), (0.1, 4), (0.2, 4)])  # rids 0,1,2
+        sched = Scheduler(reqs, max_batch=2)
+        sched.poll(0.15)
+        assert [r.rid for _, r in sched.admit(0.15)] == [1]
+        sched.poll(0.35)                       # rids 2 then 0 arrive
+        assert [r.rid for _, r in sched.admit(0.35)] == [2]  # one free slot
+        sched.retire(0, 0.5)                   # rid 1 finishes
+        assert [r.rid for _, r in sched.admit(0.5)] == [0]
+
+    def test_slot_reuse_after_retirement(self):
+        """A retired slot is reused (lowest index first) by the next
+        admission."""
+        reqs = _requests([(0.0, 4)] * 5)
+        sched = Scheduler(reqs, max_batch=2)
+        sched.poll(0.0)
+        first = sched.admit(0.0)
+        assert [s for s, _ in first] == [0, 1]
+        sched.retire(1, 0.1)
+        nxt = sched.admit(0.1)
+        assert [s for s, _ in nxt] == [1]      # freed slot reused
+        sched.retire(0, 0.2)
+        sched.retire(1, 0.2)
+        assert [s for s, _ in sched.admit(0.2)] == [0, 1]
+        assert sorted(r.rid for r in sched.finished) == [0, 1, 2]
+
+    def test_allocator_release_guard(self):
+        alloc = SlotAllocator(2)
+        s = alloc.alloc(rid=7)
+        alloc.release(s)
+        with pytest.raises(ValueError):
+            alloc.release(s)
+
+    def test_done_and_accounting(self):
+        reqs = _requests([(0.0, 2), (0.05, 2)])
+        sched = Scheduler(reqs, max_batch=1)
+        sched.poll(0.1)
+        (slot, r0), = sched.admit(0.1)
+        assert not sched.done
+        sched.retire(slot, 0.2)
+        (slot, r1), = sched.admit(0.2)
+        sched.retire(slot, 0.3)
+        assert sched.done
+        assert r0.latency_s == pytest.approx(0.2)      # arrival 0.0 -> 0.2
+        assert r1.queue_s == pytest.approx(0.15)       # arrival 0.05 -> 0.2
+
+    def test_poisson_trace_deterministic(self):
+        a = poisson_trace(8, rate_rps=100, prompt_len=16, max_new=16,
+                          vocab_size=99, seed=3)
+        b = poisson_trace(8, rate_rps=100, prompt_len=16, max_new=16,
+                          vocab_size=99, seed=3)
+        assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+        assert all((x.prompt == y.prompt).all() for x, y in zip(a, b))
+        assert all(x.max_new <= 16 for x in a)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level behavior on a reduced model.
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def qwen_server():
+    cfg = reduced_config(get_config("qwen3-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    params = model.quantize(params, 8)
+    cfg = dataclasses.replace(cfg, quant_mode="psi8")
+    return Server(cfg, params, max_batch=2, max_seq=64)
+
+
+class TestEngine:
+    def test_slot_reuse_and_budgets(self, qwen_server):
+        """6 requests through 2 slots: every slot is reused, every request
+        gets exactly its own max_new tokens."""
+        reqs = _requests([(0.0, 3), (0.0, 7), (0.0, 2), (0.0, 5),
+                          (0.0, 4), (0.0, 1)])
+        done, stats = qwen_server.serve(reqs, continuous=True)
+        assert stats["n_requests"] == 6
+        by_rid = sorted(done, key=lambda r: r.rid)
+        assert [len(r.tokens) for r in by_rid] == [3, 7, 2, 5, 4, 1]
+        slots = [r.slot for r in done]
+        assert set(slots) <= {0, 1}
+        assert min(slots.count(0), slots.count(1)) >= 2   # both reused
+
+    def test_decode_shape_stability(self, qwen_server):
+        """The jitted decode step must never recompile: varying active-slot
+        masks, positions, and admissions all reuse one executable."""
+        reqs = _requests([(0.0, 5), (0.002, 9), (0.004, 2), (0.006, 6)])
+        qwen_server.serve(reqs, continuous=True)
+        assert qwen_server.decode_cache_size() == 1
+        # a second serve with a different trace still reuses it
+        qwen_server.serve(_requests([(0.0, 4), (0.0, 4), (0.001, 8)]),
+                          continuous=True)
+        assert qwen_server.decode_cache_size() == 1
+
+    def test_eos_retirement(self, qwen_server):
+        """With an EOS id, every request's stream either stops right after
+        its first EOS token or runs to its max_new budget."""
+        reqs = _requests([(0.0, 12)] * 4)
+        done, _ = qwen_server.serve(reqs, continuous=True)
+        # pick an id that actually occurs mid-stream somewhere
+        eos = None
+        for r in done:
+            if len(r.tokens) > 2:
+                eos = r.tokens[1]
+                break
+        assert eos is not None
+        reqs2 = _requests([(0.0, 12)] * 4)
+        server = qwen_server
+        old = server.eos_id
+        try:
+            server.eos_id = eos
+            done2, _ = server.serve(reqs2, continuous=True)
+        finally:
+            server.eos_id = old
+        for r in sorted(done2, key=lambda r: r.rid):
+            if eos in r.tokens:
+                assert r.tokens.index(eos) == len(r.tokens) - 1
+            else:
+                assert len(r.tokens) == r.max_new
+
+    def test_instant_retirement_backlog_fully_served(self, qwen_server):
+        """max_new=1 requests retire at admission time; a backlog larger
+        than max_batch must still drain completely (regression: the serve
+        loop used to break with the waiting queue non-empty)."""
+        reqs = _requests([(0.0, 1)] * 5)
+        done, stats = qwen_server.serve(reqs, continuous=True)
+        assert stats["n_requests"] == 5
+        assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+        assert all(len(r.tokens) == 1 for r in done)
+
+    def test_continuous_matches_static_outputs(self, qwen_server):
+        """Greedy decode: scheduling policy may change timing, never
+        tokens."""
+        mk = lambda: _requests([(0.0, 6), (0.0, 3), (0.001, 8), (0.002, 5),
+                                (0.003, 4)])
+        done_c, _ = qwen_server.serve(mk(), continuous=True)
+        done_s, _ = qwen_server.serve(mk(), continuous=False)
+        for rc, rs in zip(sorted(done_c, key=lambda r: r.rid),
+                          sorted(done_s, key=lambda r: r.rid)):
+            assert rc.tokens == rs.tokens
+
+
+# ---------------------------------------------------------------------------
+# INT5 bit-plane packing round-trip (property).
+# ---------------------------------------------------------------------------
+class TestEngineFamilies:
+    """Every family-specific serving branch: recurrent-state freezing (ssm /
+    hybrid), exact-length per-request prefill, SWA ring-extent fallbacks,
+    and encdec enc_out slot insertion."""
+
+    @pytest.mark.parametrize("arch", ["falcon-mamba-7b", "recurrentgemma-9b",
+                                      "mixtral-8x22b", "whisper-base"])
+    def test_serve_families_schedule_invariant(self, arch):
+        cfg = reduced_config(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        server = Server(cfg, params, max_batch=2, max_seq=64)
+
+        def mk():
+            rng = np.random.default_rng(1)
+            # heterogeneous prompt lengths exercise the exact-length /
+            # pad-fallback admission paths
+            return [Request(rid=i, prompt=rng.integers(
+                        0, cfg.vocab_size, size=(6 + 5 * i,)).astype(np.int32),
+                        max_new=mn, arrival_s=0.0)
+                    for i, mn in enumerate([5, 2, 4])]
+
+        done_c, stats = server.serve(mk(), continuous=True)
+        done_s, _ = server.serve(mk(), continuous=False)
+        assert stats["n_requests"] == 3
+        by_rid_c = sorted(done_c, key=lambda r: r.rid)
+        assert [len(r.tokens) for r in by_rid_c] == [5, 2, 4]
+        for rc, rs in zip(by_rid_c, sorted(done_s, key=lambda r: r.rid)):
+            assert rc.tokens == rs.tokens
+        assert server.decode_cache_size() == 1
+
+
+class TestPackInt5:
+    @given(st.lists(st.integers(-16, 15), min_size=8, max_size=64),
+           st.integers(1, 3))
+    @settings(max_examples=40, deadline=None)
+    def test_roundtrip_property(self, vals, n_cols):
+        """unpack(pack(x)) == x for any INT5 code matrix whose row count is a
+        multiple of 8, at exactly 5 bits/weight of storage."""
+        k = (len(vals) // 8) * 8
+        codes = np.tile(np.asarray(vals[:k], np.int8).reshape(k, 1),
+                        (1, n_cols))                        # (k, n_cols)
+        packed = psi.pack_int5(jnp.asarray(codes))
+        assert packed.shape == (5, k // 8, n_cols)
+        out = np.asarray(psi.unpack_int5(packed))
+        np.testing.assert_array_equal(out, codes)
+
+    def test_rejects_bad_k(self):
+        with pytest.raises(ValueError):
+            psi.pack_int5(jnp.zeros((12, 4), jnp.int8))
