@@ -2,8 +2,11 @@
 analytic HBM-traffic advantage that is the kernel's reason to exist).
 
 Wall-times here are CPU-oracle numbers (the container has no TPU); the
-roofline-relevant quantity is the weight-byte column: bf16 2.0 B/w,
-PSI-INT8 1.0 B/w, PSI-INT5 0.625 B/w.
+roofline-relevant quantities are analytic: the weight-byte column (bf16
+2.0 B/w, PSI-INT8 1.0 B/w, PSI-INT5 0.625 B/w) and, for the decode-shaped
+sweep (M in {1, 4, 8, 16} = active slots), the padded-MAC count the
+small-M tile dispatch (``psi_matmul.pick_bm``) issues versus the fixed
+128-row tile it replaced.
 """
 from __future__ import annotations
 
@@ -14,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import psi
+from repro.kernels import psi_matmul as pk
 from repro.kernels import ref
 
 
@@ -52,6 +56,26 @@ def run():
     rows.append(("kernel_bf16", t_b, f"bytes={2.0*wb:.0f}"))
     rows.append(("kernel_psi8", t_8, f"bytes={1.0*wb:.0f}"))
     rows.append(("kernel_psi5", t_5, f"bytes={0.625*wb:.0f}"))
+
+    # Decode-shaped sweep: M = active decode slots.  Wall time is the CPU
+    # oracle; the dispatch-relevant column is padded MACs — what the TPU
+    # kernel grid actually issues with the old fixed bm=128 tile vs the
+    # small-M tile ops.psi_matmul_2d now picks (>=2x fewer at M<=16 is the
+    # acceptance bar; at M=1/f32 it is 16x).
+    print(f"decode-shaped dispatch (K={K}, N={N}; M = active slots):")
+    for M in (1, 4, 8, 16):
+        xm = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+        t_m = _time(f_int8, xm, q8.codes, q8.scale.reshape(-1))
+        bm = pk.pick_bm(M, jnp.float32)
+        macs_old = pk.padded_macs(M, K, N)            # fixed 128-row tile
+        macs_new = pk.padded_macs(M, K, N, bm=bm)
+        ratio = macs_old / macs_new
+        print(f"  M={M:<3d} bm {pk.DEFAULT_BM}->{bm:<3d} "
+              f"padded MACs {macs_old / 1e6:7.1f}M -> {macs_new / 1e6:6.1f}M "
+              f"({ratio:4.1f}x fewer)  oracle {t_m:7.0f} us")
+        rows.append((f"kernel_decode_m{M}", t_m,
+                     f"bm={bm};padded_macs={macs_new};"
+                     f"macs_vs_128tile={ratio:.1f}x"))
     return rows
 
 

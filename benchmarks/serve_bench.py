@@ -12,6 +12,13 @@ between a sequence's retirement and the batch barrier.
 
   PYTHONPATH=src python -m benchmarks.serve_bench --arch qwen3-8b --reduced \\
       --quant psi8
+
+Sharded serving (mesh-native Executor, DESIGN.md §5) runs the same bench
+with decode slots partitioned over the data axis — token-identical results:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
+      python -m benchmarks.serve_bench --arch qwen3-8b --reduced \\
+      --quant psi8 --mesh 4x2
 """
 from __future__ import annotations
 
@@ -49,6 +56,9 @@ def run_bench(args):
 
     speedup = stat_c["tok_per_s"] / stat_s["tok_per_s"]
     p99_ratio = stat_c["p99_latency_s"] / stat_s["p99_latency_s"]
+    mesh = server.executor.mesh
+    print(f"  mesh      : {dict(mesh.shape)} "
+          f"({stat_c['slot_shards']} slot shard(s) over the data axis)")
     print(f"  static    : {_fmt(stat_s)}")
     print(f"  continuous: {_fmt(stat_c)}")
     print(f"  continuous/static: {speedup:.2f}x tokens/s, "

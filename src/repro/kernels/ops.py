@@ -1,9 +1,25 @@
 """Jit'd dispatch wrappers around the Pallas kernels.
 
-On TPU the Pallas kernel runs natively; on CPU (this container) the pure-jnp
-oracle executes instead — identical semantics (tests assert allclose between
-the interpret-mode kernel and the oracle).  Set ``REPRO_FORCE_INTERPRET=1`` to
-route through ``pallas_call(interpret=True)`` on CPU (used by kernel tests).
+Backend routing is explicit (no silent fall-through):
+
+  * ``tpu``          -> the Pallas kernel (compressed weights in HBM,
+                        VMEM dequantization);
+  * ``gpu`` / ``cuda`` / ``rocm``
+                     -> the dequantize-then-einsum fast path in
+                        ``repro.kernels.ref`` (tensor-core-eligible dense
+                        dot; the bit-plane loop has no Mosaic pipeline to
+                        win on a GPU);
+  * anything else (``cpu``) -> the pure-jnp oracle — identical semantics
+                        (tests assert allclose between the interpret-mode
+                        kernel and the oracle).
+
+Set ``REPRO_FORCE_INTERPRET=1`` to route through
+``pallas_call(interpret=True)`` on CPU (used by kernel tests).
+
+Decode-shaped dispatch (DESIGN.md §2): the M-tile follows the actual row
+count (``psi_matmul.pick_bm``), so a decode step over <=16 slots stops
+padding M up to the 128-row MXU tile (8-16x fewer padded MACs per GEMV;
+tracked by ``benchmarks/kernel_bench.py``).
 """
 from __future__ import annotations
 
@@ -15,9 +31,19 @@ import jax.numpy as jnp
 from repro.kernels import psi_matmul as _pk
 from repro.kernels import ref as _ref
 
+_GPU_BACKENDS = ("gpu", "cuda", "rocm")
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
 
 def _use_pallas() -> bool:
-    return jax.default_backend() == "tpu"
+    return _backend() == "tpu"
+
+
+def _use_gpu_fast_path() -> bool:
+    return _backend() in _GPU_BACKENDS
 
 
 def _force_interpret() -> bool:
@@ -27,16 +53,23 @@ def _force_interpret() -> bool:
 def psi_matmul_2d(x2d: jnp.ndarray, wleaf: dict) -> jnp.ndarray:
     """(M, K) x serving-format weight dict -> (M, N)."""
     scale = wleaf["scale"].reshape(-1)
+    bm = _pk.pick_bm(x2d.shape[0], x2d.dtype)
     if "planes" in wleaf:
         if _use_pallas():
-            return _pk.psi_matmul_int5(x2d, wleaf["planes"], scale)
+            return _pk.psi_matmul_int5(x2d, wleaf["planes"], scale, bm=bm)
+        if _use_gpu_fast_path():
+            return _ref.psi_matmul_int5_dequant(x2d, wleaf["planes"], scale)
         if _force_interpret():
-            return _pk.psi_matmul_int5(x2d, wleaf["planes"], scale, interpret=True)
+            return _pk.psi_matmul_int5(x2d, wleaf["planes"], scale, bm=bm,
+                                       interpret=True)
         return _ref.psi_matmul_int5_ref(x2d, wleaf["planes"], scale)
     if _use_pallas():
-        return _pk.psi_matmul_int8(x2d, wleaf["codes"], scale)
+        return _pk.psi_matmul_int8(x2d, wleaf["codes"], scale, bm=bm)
+    if _use_gpu_fast_path():
+        return _ref.psi_matmul_int8_dequant(x2d, wleaf["codes"], scale)
     if _force_interpret():
-        return _pk.psi_matmul_int8(x2d, wleaf["codes"], scale, interpret=True)
+        return _pk.psi_matmul_int8(x2d, wleaf["codes"], scale, bm=bm,
+                                   interpret=True)
     return _ref.psi_matmul_int8_ref(x2d, wleaf["codes"], scale)
 
 

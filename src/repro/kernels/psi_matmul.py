@@ -34,6 +34,37 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BM, DEFAULT_BN, DEFAULT_BK = 128, 128, 128
 
+# Minimum legal sublane (second-to-minor) tile per dtype — the Mosaic
+# register-tiling floor.  The lane (minor) dim stays at 128 always.
+_MIN_SUBLANE = {jnp.dtype(jnp.bfloat16): 16, jnp.dtype(jnp.float32): 8}
+
+
+def pick_bm(M: int, dtype=jnp.float32) -> int:
+    """Decode-shaped M-tile dispatch (DESIGN.md §2).
+
+    The serving decode step calls the kernel at M = active slots (1-16);
+    padding M up to the square 128-row tile makes the MXU grind 8-16x
+    zero rows per (n, k) grid step.  Pick the smallest legal sublane
+    multiple covering M instead (f32: 8, bf16: 16) — same kernel body,
+    same numerics (the block-shape-sweep tests assert invariance), just a
+    shorter M tile.  Large M keeps the square MXU-aligned default.
+    """
+    if M >= DEFAULT_BM:
+        return DEFAULT_BM
+    lo = _MIN_SUBLANE.get(jnp.dtype(dtype), 8)
+    return max(lo, -(-M // lo) * lo)
+
+
+def padded_macs(M: int, K: int, N: int, *, bm: int = DEFAULT_BM,
+                bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> int:
+    """MACs the tiled kernel actually issues once every dim is padded up to
+    its tile multiple — the quantity the decode-shaped dispatch cuts and
+    ``benchmarks/kernel_bench.py`` tracks."""
+    mp = -(-M // bm) * bm
+    kp = -(-K // bk) * bk
+    np_ = -(-N // bn) * bn
+    return mp * kp * np_
+
 # jax 0.5 renamed pltpu.TPUCompilerParams -> CompilerParams; accept both so
 # the kernels (and their interpret-mode tests) run across the 0.4/0.5 pin.
 # A future rename fails loudly here at import, not inside pallas_call.

@@ -33,3 +33,26 @@ def psi_matmul_int5_ref(x: jnp.ndarray, planes: jnp.ndarray,
     """
     codes = psi.unpack_int5(planes)
     return psi_matmul_int8_ref(x, codes, scale)
+
+
+# ---------------------------------------------------------------------------
+# Non-TPU accelerator fast path: dequantize once, single dense dot.
+#
+# GPUs have no Mosaic/VMEM pipeline, so the bit-plane loop and the f32
+# oracle einsum both miss the tensor cores.  Folding the per-output-channel
+# scale into the weight and casting to the activation dtype BEFORE the dot
+# keeps the matmul a plain x.dtype @ x.dtype contraction (tensor-core
+# eligible, f32 accumulation) — mathematically identical to the oracle's
+# scale-in-the-epilogue because the scale only varies along the output dim.
+# ---------------------------------------------------------------------------
+def psi_matmul_int8_dequant(x: jnp.ndarray, codes: jnp.ndarray,
+                            scale: jnp.ndarray) -> jnp.ndarray:
+    w = (codes.astype(jnp.float32) * scale.reshape(1, -1)).astype(x.dtype)
+    y = jnp.einsum("...k,kn->...n", x, w,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def psi_matmul_int5_dequant(x: jnp.ndarray, planes: jnp.ndarray,
+                            scale: jnp.ndarray) -> jnp.ndarray:
+    return psi_matmul_int8_dequant(x, psi.unpack_int5(planes), scale)

@@ -89,19 +89,42 @@ def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
 # Slot allocation.
 # ---------------------------------------------------------------------------
 class SlotAllocator:
-    """Fixed pool of ``n_slots`` decode slots; lowest-index-first reuse."""
+    """Fixed pool of ``n_slots`` decode slots, optionally partitioned into
+    per-shard pools.
 
-    def __init__(self, n_slots: int):
+    On a sharded mesh the Executor lays the slot dim of the decode cache out
+    contiguously over the data axes (``sharding.slot_shard_map``); admission
+    then balances data-parallel work by taking a free slot from the shard
+    with the MOST free slots (ties -> lowest shard index), lowest slot index
+    within the shard.  With ``n_shards == 1`` (the single-device no-op path)
+    this degenerates to exactly the classic lowest-index-first reuse.
+    """
+
+    def __init__(self, n_slots: int, n_shards: int = 1,
+                 shard_of: Optional[Sequence[int]] = None):
         self.n_slots = n_slots
-        self._free = sorted(range(n_slots), reverse=True)  # pop() -> lowest
+        self.n_shards = max(int(n_shards), 1)
+        if shard_of is None:  # contiguous chunks, GSPMD's layout
+            shard_of = [(s * self.n_shards) // n_slots for s in range(n_slots)]
+        self.shard_of = [int(s) for s in shard_of]
+        assert len(self.shard_of) == n_slots
+        self._free: List[List[int]] = [
+            sorted((s for s in range(n_slots) if self.shard_of[s] == i),
+                   reverse=True)                          # pop() -> lowest
+            for i in range(self.n_shards)]
         self.occupant: List[Optional[int]] = [None] * n_slots  # slot -> rid
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
+
+    def free_per_shard(self) -> List[int]:
+        return [len(f) for f in self._free]
 
     def alloc(self, rid: int) -> int:
-        slot = self._free.pop()
+        shard = max(range(self.n_shards),
+                    key=lambda i: (len(self._free[i]), -i))
+        slot = self._free[shard].pop()
         self.occupant[slot] = rid
         return slot
 
@@ -109,8 +132,9 @@ class SlotAllocator:
         if self.occupant[slot] is None:
             raise ValueError(f"slot {slot} is already free")
         self.occupant[slot] = None
-        self._free.append(slot)
-        self._free.sort(reverse=True)
+        pool = self._free[self.shard_of[slot]]
+        pool.append(slot)
+        pool.sort(reverse=True)
 
 
 # ---------------------------------------------------------------------------
@@ -128,7 +152,9 @@ class Scheduler:
         sched.retire(slot, now)          # at EOS / max_new
     """
 
-    def __init__(self, requests: Sequence[Request], max_batch: int):
+    def __init__(self, requests: Sequence[Request], max_batch: int,
+                 n_shards: int = 1,
+                 shard_of: Optional[Sequence[int]] = None):
         for r in requests:
             if r.admit_s is not None or r.tokens:
                 raise ValueError(
@@ -137,7 +163,7 @@ class Scheduler:
         self._pending = deque(sorted(requests,
                                      key=lambda r: (r.arrival_s, r.rid)))
         self.waiting: deque = deque()
-        self.slots = SlotAllocator(max_batch)
+        self.slots = SlotAllocator(max_batch, n_shards, shard_of)
         self.running: Dict[int, Request] = {}       # slot -> request
         self.finished: List[Request] = []
 

@@ -11,29 +11,38 @@ compiles it exactly once per serve lifetime (DESIGN.md §3).  The decode step
 runs entirely on the PSI serving format — on TPU the psi_matmul Pallas kernel
 reads 5/8-bit weights from HBM (DESIGN.md §2).
 
+The Server is the HOST half only: scheduler loop, prompt buckets, latency
+accounting.  Every device interaction — mesh construction, sharded
+placement, jit compilation + donation — lives in the mesh-native
+``repro.runtime.Executor`` (DESIGN.md §5); there is exactly one compilation
+path whether the engine runs on 1 device or a pod.  On a sharded mesh the
+decode slots are laid out contiguously over the "data" axis and the
+scheduler admits into per-shard free slots.
+
 A batch-synchronous ("static") mode runs the same machinery with admission
 barriered until every slot drains — the baseline ``benchmarks/serve_bench.py``
 measures continuous batching against.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --reduced \\
       --quant psi8 --requests 32 --max-batch 4 --arrival-rate 1000 \\
-      --max-new 48 --mode both
+      --max-new 48 --mode both --mesh 1x1
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.launch.mesh import make_mesh
 from repro.launch.scheduler import (Request, Scheduler, poisson_trace,
                                     summarize)
 from repro.models import build_model
+from repro.runtime.executor import Executor
 
 # Prompt lengths are rounded up to a multiple of this before prefill so the
 # number of compiled prefill shapes is bounded (attention caches mask the pad
@@ -41,19 +50,44 @@ from repro.models import build_model
 PREFILL_BUCKET = 16
 
 
+def parse_mesh_spec(spec: Optional[str]):
+    """"DxM" (e.g. "1x1", "4x2") -> a (data, model) Mesh; None / "1x1" with
+    one device -> None (the Executor's single-device path)."""
+    if not spec or spec == "1x1":
+        return None
+    d, m = (int(p) for p in spec.lower().split("x"))
+    if d * m > len(jax.devices()):
+        raise ValueError(
+            f"mesh {spec} needs {d * m} devices, have {len(jax.devices())} "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N on "
+            f"CPU)")
+    return make_mesh((d, m), ("data", "model"))
+
+
 class Server:
     """Slot-based serving engine: continuous or batch-synchronous scheduling
-    over one shape-stable jitted decode step (DESIGN.md §3)."""
+    over one shape-stable jitted decode step (DESIGN.md §3).  Device work is
+    delegated to a mesh-native Executor (DESIGN.md §5)."""
 
     def __init__(self, cfg, params, max_batch: int = 4, max_seq: int = 256,
-                 eos_id: int = -1, bucket: int = PREFILL_BUCKET):
+                 eos_id: int = -1, bucket: int = PREFILL_BUCKET, mesh=None,
+                 executor: Optional[Executor] = None):
         self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.bucket = bucket
+        if executor is not None:
+            if mesh is not None:
+                raise ValueError("pass mesh= OR executor= (the executor "
+                                 "already owns its mesh), not both")
+            if (executor.max_batch, executor.max_seq) != (max_batch, max_seq):
+                raise ValueError(
+                    f"injected executor was built for max_batch="
+                    f"{executor.max_batch}, max_seq={executor.max_seq}; "
+                    f"Server asked for {max_batch}/{max_seq}")
+        self.executor = executor if executor is not None else Executor(
+            cfg, params, max_batch=max_batch, max_seq=max_seq, mesh=mesh)
         # Recurrent state absorbs pad tokens, so SSM/hybrid (and whisper's
         # decoder) prefill at exact prompt length instead of padded buckets.
         self._pad_ok = cfg.family not in ("ssm", "hybrid", "encdec")
@@ -61,64 +95,6 @@ class Server:
         # actual KV ring extent (init_kv_cache caps SWA caches at the window)
         self._ring_extent = (min(max_seq, self._swa_window)
                              if self._swa_window else max_seq)
-        # The engine cache argument is donated everywhere: the serve loop
-        # rebinds it after every call, and in-place updates spare a full
-        # cache copy per decode step / admission (CPU and TPU both honor
-        # donation for these aliasable update patterns).
-        self._prefill = jax.jit(self._prefill_fn)
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(4,))
-        # burst admission: scatter every valid row of a batched prefill cache
-        # into its slot in ONE jitted call (XLA aliases the row updates into
-        # a single cache copy instead of max_batch sequential ones).
-        self._insert_burst = jax.jit(self._insert_burst_fn,
-                                     donate_argnums=(0,))
-        # steady-state single admission: prefill + slot insertion fused into
-        # one dispatch (one host sync per admission instead of two).
-        self._prefill_insert = jax.jit(self._prefill_insert_fn,
-                                       donate_argnums=(3,))
-
-    # ------------------------------------------------------------ jitted fns
-    def _prefill_fn(self, params, tokens, true_lens):
-        """(B, Sb) right-padded prompts -> (first greedy token (B,), cache)."""
-        B, S = tokens.shape
-        batch = {"tokens": tokens}
-        if self.cfg.rope == "mrope":
-            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-            batch["positions"] = jnp.broadcast_to(pos[:, None], (B, 3, S))
-        if self.cfg.family == "encdec":
-            batch["frames"] = jnp.zeros(
-                (B, self.cfg.enc_frames, self.cfg.d_model),
-                jnp.dtype(self.cfg.dtype))
-        logits, cache = self.model.prefill(params, batch,
-                                           cache_len=self.max_seq,
-                                           true_lens=true_lens)
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
-
-    def _decode_fn(self, params, token, pos, active, cache):
-        """One masked decode step over all slots; greedy next token (B,)."""
-        batch = {"token": token, "pos": pos, "active": active}
-        if self.cfg.rope == "mrope":
-            batch["positions"] = jnp.broadcast_to(
-                pos[:, None, :], (pos.shape[0], 3, 1))
-        logits, cache = self.model.decode_step(params, batch, cache)
-        return jnp.argmax(logits, -1).astype(jnp.int32), cache
-
-    def _prefill_insert_fn(self, params, tokens, true_lens, cache, slot):
-        """Fused single-admission path: prefill one sequence and write its
-        cache straight into ``slot``."""
-        first, seq_cache = self._prefill_fn(params, tokens, true_lens)
-        return first, self.model.insert_cache(cache, seq_cache, slot)
-
-    def _insert_burst_fn(self, cache, seq_cache, slots, valid):
-        """Insert row i of ``seq_cache`` into slot ``slots[i]`` for every i
-        with ``valid[i]`` (both (max_batch,), traced)."""
-        for i in range(self.max_batch):
-            row = self.model.slice_cache(seq_cache, jnp.int32(i))
-            updated = self.model.insert_cache(cache, row, slots[i])
-            cache = jax.tree_util.tree_map(
-                lambda new, old, i=i: jnp.where(valid[i], new, old),
-                updated, cache)
-        return cache
 
     # -------------------------------------------------------------- plumbing
     def _bucket_len(self, n: int) -> int:
@@ -177,20 +153,16 @@ class Server:
             tl[i] = len(req.prompt)
         if len(admits) == 1:                     # fused prefill + insert
             slot = admits[0][0]
-            first, cache = self._prefill_insert(
-                self.params, jnp.asarray(toks), jnp.asarray(tl), cache,
-                jnp.int32(slot))
+            first, cache = self.executor.prefill_insert(toks, tl, cache, slot)
             return [int(first[0])], cache
-        first, seq_cache = self._prefill(self.params, jnp.asarray(toks),
-                                         jnp.asarray(tl))
+        first, seq_cache = self.executor.prefill(toks, tl)
         first = np.asarray(first)
         slots = np.zeros((self.max_batch,), np.int32)
         valid = np.zeros((self.max_batch,), bool)
         for i, (slot, _) in enumerate(admits):
             slots[i] = slot
             valid[i] = True
-        cache = self._insert_burst(cache, seq_cache, jnp.asarray(slots),
-                                   jnp.asarray(valid))
+        cache = self.executor.insert_burst(cache, seq_cache, slots, valid)
         return [int(first[i]) for i in range(len(admits))], cache
 
     def warmup(self, requests: Sequence[Request]) -> None:
@@ -198,29 +170,26 @@ class Server:
         fused single-admission prefill+insert and the max_batch burst
         prefill + row insert, plus the decode step) against a throwaway
         cache, so serving measures steady-state latency, not XLA."""
+        ex = self.executor
         buckets = sorted({self._bucket_len(len(r.prompt)) for r in requests})
-        cache = self.model.init_cache(self.max_batch, self.max_seq,
-                                      dtype=jnp.dtype(self.cfg.dtype))
+        cache = ex.init_cache()
         for sb in buckets:
             # single admission: fused prefill+insert (the only B=1 path)
-            toks1 = jnp.zeros((1, sb), jnp.int32)
-            tl1 = jnp.ones((1,), jnp.int32)
-            _, cache = jax.block_until_ready(self._prefill_insert(
-                self.params, toks1, tl1, cache, jnp.int32(0)))
+            toks1 = np.zeros((1, sb), np.int32)
+            tl1 = np.ones((1,), np.int32)
+            _, cache = jax.block_until_ready(
+                ex.prefill_insert(toks1, tl1, cache, 0))
             if self.max_batch > 1:
                 # admission burst: batched prefill + one scatter insert
-                toksB = jnp.zeros((self.max_batch, sb), jnp.int32)
-                tlB = jnp.ones((self.max_batch,), jnp.int32)
-                _, seq_cache = jax.block_until_ready(
-                    self._prefill(self.params, toksB, tlB))
-                slots = jnp.arange(self.max_batch, dtype=jnp.int32)
-                cache = self._insert_burst(
-                    cache, seq_cache, slots,
-                    jnp.zeros((self.max_batch,), bool))
-        tok = jnp.zeros((self.max_batch, 1), jnp.int32)
-        act = jnp.zeros((self.max_batch,), bool)
-        jax.block_until_ready(
-            self._decode(self.params, tok, tok, act, cache))
+                toksB = np.zeros((self.max_batch, sb), np.int32)
+                tlB = np.ones((self.max_batch,), np.int32)
+                _, seq_cache = jax.block_until_ready(ex.prefill(toksB, tlB))
+                slots = np.arange(self.max_batch, dtype=np.int32)
+                cache = ex.insert_burst(cache, seq_cache, slots,
+                                        np.zeros((self.max_batch,), bool))
+        tok = np.zeros((self.max_batch, 1), np.int32)
+        act = np.zeros((self.max_batch,), bool)
+        jax.block_until_ready(ex.decode(tok, tok, act, cache))
 
     # ------------------------------------------------------------- the loop
     def serve(self, requests: Sequence[Request], continuous: bool = True,
@@ -233,6 +202,7 @@ class Server:
         interpreted on the wall clock, starting when this call begins.
         """
         clock = time.perf_counter
+        ex = self.executor
         if not (self._swa_window or self.cfg.is_attention_free):
             # fail fast, before any request is served/mutated, rather than
             # aborting mid-run at admission time
@@ -246,9 +216,9 @@ class Server:
                     f"Server for the longest request")
         if warmup:
             self.warmup(requests)
-        sched = Scheduler(requests, self.max_batch)
-        cache = self.model.init_cache(self.max_batch, self.max_seq,
-                                      dtype=jnp.dtype(self.cfg.dtype))
+        sched = Scheduler(requests, self.max_batch,
+                          n_shards=ex.n_slot_shards, shard_of=ex.slot_shards)
+        cache = ex.init_cache()
         B = self.max_batch
         tok = np.zeros((B, 1), np.int32)
         pos = np.zeros((B, 1), np.int32)
@@ -282,9 +252,7 @@ class Server:
                 if wait > 0:
                     time.sleep(min(wait, 0.005))
                 continue
-            new_tok, cache = self._decode(self.params, jnp.asarray(tok),
-                                          jnp.asarray(pos), jnp.asarray(act),
-                                          cache)
+            new_tok, cache = ex.decode(tok, pos, act, cache)
             new_tok = np.asarray(new_tok)
             steps += 1
             now = clock() - t0
@@ -303,13 +271,11 @@ class Server:
                           mode="continuous" if continuous else "static")
         stats["decode_steps"] = steps
         stats["decode_compiles"] = self.decode_cache_size()
+        stats["slot_shards"] = ex.n_slot_shards
         return sched.finished, stats
 
-    # jit-cache introspection for the shape-stability tests / stats
     def decode_cache_size(self) -> int:
-        # _cache_size is a private jax API; degrade to -1 (unknown) rather
-        # than fail the stats path if an upgrade removes it.
-        return getattr(self._decode, "_cache_size", lambda: -1)()
+        return self.executor.decode_cache_size()
 
 
 def build_server(args) -> Tuple[Server, object]:
@@ -326,9 +292,10 @@ def build_server(args) -> Tuple[Server, object]:
     # or the ring layout would silently drop the prompt head.
     longest = args.prompt_len + args.prompt_jitter
     prompt_pad = -(-longest // PREFILL_BUCKET) * PREFILL_BUCKET
+    mesh = parse_mesh_spec(getattr(args, "mesh", None))
     server = Server(cfg, params, max_batch=args.max_batch,
                     max_seq=prompt_pad + args.max_new + 8,
-                    eos_id=args.eos_id)
+                    eos_id=args.eos_id, mesh=mesh)
     return server, cfg
 
 
@@ -364,6 +331,10 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="-1 disables EOS retirement")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help='serving mesh "DATAxMODEL" (e.g. 4x2); decode '
+                         'slots partition over the data axis, weights TP '
+                         'over model.  Default/1x1: single-device path')
 
 
 def main():
@@ -385,7 +356,8 @@ def main():
               f"latency p50 {stats['p50_latency_s'] * 1e3:.0f}ms "
               f"p99 {stats['p99_latency_s'] * 1e3:.0f}ms | "
               f"ttft p50 {stats['p50_ttft_s'] * 1e3:.0f}ms | "
-              f"decode compiles {stats['decode_compiles']}")
+              f"decode compiles {stats['decode_compiles']} | "
+              f"slot shards {stats['slot_shards']}")
         for r in done[:2]:
             print(f"  req {r.rid}: slot {r.slot}, {len(r.tokens)} tokens, "
                   f"{r.out[:10].tolist()}...")

@@ -173,7 +173,8 @@ def _masked_row_write(buf, bidx, slot, new_val, active):
     return buf.at[bidx, slot].set(jnp.where(mask, new_val, old))
 
 
-def decode_attention_block(p, x, cfg, positions, cache, active=None):
+def decode_attention_block(p, x, cfg, positions, cache, active=None,
+                           constrain=None):
     """Single-token decode with a (ring-buffer when windowed) KV cache.
 
     cache: {"k","v": (B, C, Hkv, D), "k_pos": (B, C) int32 (-1 = empty)}
@@ -184,7 +185,10 @@ def decode_attention_block(p, x, cfg, positions, cache, active=None):
     (B, 3, 1) for mrope).  ``active`` is an optional (B,) bool mask: rows
     where it is False compute a (discarded) output but leave the cache
     untouched — the masked-decode contract of the serving engine
-    (DESIGN.md §3).  Returns (y, new_cache).
+    (DESIGN.md §3).  ``constrain`` (executor-threaded, DESIGN.md §5)
+    re-pins the updated cache to its slot-over-data serving sharding right
+    after the masked scatter writes, before the cache is read back for
+    attention.  Returns (y, new_cache).
     """
     q, k_new, v_new = _project_qkv(p, x, cfg, positions)
     pos1d = positions[:, 0] if positions.ndim == 3 else positions   # (B,1)
@@ -204,6 +208,8 @@ def decode_attention_block(p, x, cfg, positions, cache, active=None):
                                          active),
             "k_pos": k_pos,
         }
+        if constrain is not None:
+            new_cache = constrain(new_cache)
         k = _kv_dequantize(new_cache["k"], new_cache["k_scale"], x.dtype)
         v = _kv_dequantize(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:
@@ -214,6 +220,8 @@ def decode_attention_block(p, x, cfg, positions, cache, active=None):
                                    active),
             "k_pos": k_pos,
         }
+        if constrain is not None:
+            new_cache = constrain(new_cache)
         k, v = new_cache["k"], new_cache["v"]
     window = cfg.window if cfg.attn_type == "swa" else 0
     o = sdpa(q, k, v, pos1d, k_pos, causal=True, window=window)

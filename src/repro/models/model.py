@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core import quantizer
 from repro.models import attention, layers, transformer
 from repro.quant import embed, linear, tied_logits
+from repro.runtime import sharding as shr
 
 
 def _lm_positions(B, S, offset=0):
@@ -138,12 +139,20 @@ class Model:
         return total, {"ce": ce, "aux": aux}
 
     # ---------------------------------------------------------------- serving
-    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16):
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16, mesh=None):
+        """Batched decode cache.  With ``mesh`` (threaded in by the
+        Executor — its only cache-construction path), every leaf is
+        committed to its serving sharding — slot dim over the data axes,
+        heads/state channels over "model" (DESIGN.md §5).  ``mesh=None``
+        (direct model use, eval_shape) skips placement."""
         cfg = self.cfg
         cache = {"kv": transformer.init_stack_cache(cfg, batch, seq_len, dtype)}
         if cfg.family == "encdec":
             cache["enc_out"] = jnp.zeros((batch, cfg.enc_frames, cfg.d_model),
                                          dtype)
+        if mesh is not None:
+            cache = jax.device_put(cache, shr.to_shardings(
+                shr.cache_specs(cfg, mesh, cache), mesh))
         return cache
 
     def prefill(self, params, batch, cache_len=None, true_lens=None):
@@ -172,24 +181,31 @@ class Model:
         cache["kv"] = _mask_padded_kv(cache["kv"], true_lens)
         return last, cache
 
-    def decode_step(self, params, batch, cache):
+    def decode_step(self, params, batch, cache, mesh=None):
         """batch: {"token": (B,1), "pos": (B,1) or "positions": (B,3,1),
         optional "active": (B,) bool}.  Rows with ``active`` False compute a
         throwaway logit but leave their cache/state rows untouched — the
         masked-decode contract that lets the continuous-batching engine keep
-        the jitted step shape-stable over free slots (DESIGN.md §3)."""
+        the jitted step shape-stable over free slots (DESIGN.md §3).
+
+        ``mesh`` (threaded in by the Executor) pins every masked cache write
+        to its serving sharding via a block-level constraint inside the
+        layer scan (DESIGN.md §5); None / one device is the unsharded path.
+        """
         cfg = self.cfg
         token = batch["token"]
-        B = token.shape[0]
         x = embed(params["embed"], token, jnp.dtype(cfg.dtype))
         positions = batch.get("positions", batch.get("pos"))
         if cfg.rope == "sinusoidal":
             x = x + layers.sinusoidal_from_positions(
                 positions, cfg.d_model, jnp.dtype(cfg.dtype))
+        constrain = None
+        if mesh is not None and mesh.size > 1:
+            constrain = functools.partial(shr.constrain_block_cache, cfg, mesh)
         enc_out = cache.get("enc_out")
         x, new_kv = transformer.apply_decoder_stack_decode(
             params["stack"], x, cfg, positions, cache["kv"], enc_kv=enc_out,
-            active=batch.get("active"))
+            active=batch.get("active"), constrain=constrain)
         x = layers.apply_norm(params["norm_f"], x, cfg)
         logits = self._logits(params, x)
         new_cache = dict(cache)

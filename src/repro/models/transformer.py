@@ -90,14 +90,17 @@ def _freeze_inactive_state(new_state, old_state, active):
 
 
 def apply_block_decode(p, x, cfg, kind, positions, cache, enc_kv=None,
-                       active=None):
+                       active=None, constrain=None):
     """One-token decode block.  Returns (x, new_cache).  ``active`` (B,) bool
-    masks cache/state mutation per batch row (None = all rows live)."""
+    masks cache/state mutation per batch row (None = all rows live).
+    ``constrain`` (executor-threaded, DESIGN.md §5) re-pins the block's
+    updated cache to its serving sharding after the masked writes."""
     h = layers.apply_norm(p["norm1"], x, cfg)
     if kind in ("attn", "xattn"):
         y, cache = attention.decode_attention_block(p["attn"], h, cfg,
                                                     positions, cache,
-                                                    active=active)
+                                                    active=active,
+                                                    constrain=constrain)
         x = x + y
         if kind == "xattn":
             hx = layers.apply_norm(p["norm_x"], x, cfg)
@@ -106,10 +109,14 @@ def apply_block_decode(p, x, cfg, kind, positions, cache, enc_kv=None,
     elif kind == "rec":
         y, new_cache = rglru.rglru_decode_step(p["rec"], h, cfg, cache)
         cache = _freeze_inactive_state(new_cache, cache, active)
+        if constrain is not None:
+            cache = constrain(cache)
         x = x + y
     elif kind == "mamba":
         y, new_cache = ssm.mamba_decode_step(p["mamba"], h, cfg, cache)
         cache = _freeze_inactive_state(new_cache, cache, active)
+        if constrain is not None:
+            cache = constrain(cache)
         x = x + y
     if kind != "mamba":
         h2 = layers.apply_norm(p["norm2"], x, cfg)
@@ -222,10 +229,12 @@ def apply_decoder_stack(p, x, cfg, positions, enc_kv=None, collect_cache=False):
 
 
 def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None,
-                               active=None):
+                               active=None, constrain=None):
     """cache = (group_cache_stacked, tail_cache_list) as produced by
     ``init_stack_cache``.  ``active`` (B,) bool gates cache writes per row
-    (continuous batching; DESIGN.md §3).  Returns (x, new_cache)."""
+    (continuous batching; DESIGN.md §3).  ``constrain`` (executor-threaded)
+    pins each block's updated cache to its serving sharding inside the scan
+    (DESIGN.md §5).  Returns (x, new_cache)."""
     group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
     g_cache, t_cache = cache
 
@@ -235,7 +244,7 @@ def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None,
         for i, kind in enumerate(group_kinds):
             x, nc = apply_block_decode(gp[f"b{i}_{kind}"], x, cfg, kind,
                                        positions, gc[f"b{i}"], enc_kv,
-                                       active=active)
+                                       active=active, constrain=constrain)
             new_c[f"b{i}"] = nc
         return x, new_c
 
@@ -243,7 +252,7 @@ def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None,
     new_t = []
     for tp, kind, tc in zip(p["tail"], tail_kinds, t_cache):
         x, nc = apply_block_decode(tp, x, cfg, kind, positions, tc, enc_kv,
-                                   active=active)
+                                   active=active, constrain=constrain)
         new_t.append(nc)
     return x, (new_g_cache, new_t)
 

@@ -1,0 +1,244 @@
+"""Mesh-native execution substrate for the serving engine (DESIGN.md §5).
+
+The Executor is the device half of the serving stack: it owns the mesh
+lifecycle, `NamedSharding` placement for every leaf (PSI-quantized params,
+the slot-based decode cache, decode-step inputs), and the jit compilation +
+donation contract for the serving entry points — prefill, decode_step, and
+cache insert/slice.  `repro.launch.serve.Server` is the host half (scheduler
+loop, buckets, accounting) and routes ALL device work through one Executor,
+so there is exactly one compilation path whether the mesh has 1 device or a
+pod.
+
+Placement contract (derived in ``repro.runtime.sharding``):
+  * params: tensor-parallel over "model" (quantized codes/planes follow the
+    logical weight rule; scale shards only its non-singleton dims);
+  * decode cache + decode inputs: slot dim over the data axes — the
+    scheduler partitions slots into per-shard pools via ``slot_shard_map``;
+  * donation: the engine cache is donated at every entry point that
+    consumes it (decode, fused prefill+insert, burst insert) — the caller
+    rebinds the returned cache, and XLA aliases the update in place.
+
+Elastic integration (single-device path is a no-op): ``from_devices`` sizes
+the mesh with ``elastic.plan_remesh``; ``remesh`` rebuilds the Executor on a
+surviving device count, resharding params by device_put (the load path
+itself); a ``StragglerMonitor`` is attached only when more than one process
+participates.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import sharding as shr
+from repro.runtime.elastic import make_mesh_from_plan, plan_remesh
+from repro.runtime.straggler import StragglerMonitor
+
+
+def single_device_mesh():
+    """The degenerate (1, 1) data x model mesh: every spec resolves to
+    replicated-on-one-device, so the Executor's single-device behavior is
+    bit-identical to unsharded jit."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+class Executor:
+    """Owns mesh, placement, and the compiled serving entry points."""
+
+    def __init__(self, cfg, params, *, max_batch: int, max_seq: int,
+                 mesh=None, model=None):
+        if model is None:
+            from repro.models import build_model   # lazy: models imports us
+            model = build_model(cfg)
+        self.cfg = cfg
+        self.model = model
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.mesh = mesh if mesh is not None else single_device_mesh()
+        self.dtype = jnp.dtype(cfg.dtype)
+
+        # ---- placement: params now, cache/input shardings precomputed ----
+        self.param_shardings = shr.to_shardings(
+            shr.param_specs(params, cfg, self.mesh, mode="serve"), self.mesh)
+        self.params = jax.device_put(params, self.param_shardings)
+
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(max_batch, max_seq, dtype=self.dtype))
+        self.cache_shardings = shr.to_shardings(
+            shr.cache_specs(cfg, self.mesh, cache_shape), self.mesh)
+
+        step_inputs = {
+            "token": jax.ShapeDtypeStruct((max_batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((max_batch, 1), jnp.int32),
+            "active": jax.ShapeDtypeStruct((max_batch,), jnp.bool_),
+        }
+        self._step_shardings = shr.to_shardings(
+            shr.serve_batch_specs(cfg, self.mesh, step_inputs), self.mesh)
+
+        # ---- slot partitioning for the mesh-aware scheduler ----
+        self.n_slot_shards = shr.batch_shard_count(cfg, self.mesh, max_batch)
+        self.slot_shards = shr.slot_shard_map(cfg, self.mesh, max_batch)
+        dp_extent = int(np.prod([self.mesh.shape[a] for a in shr.DP_AXES
+                                 if a in self.mesh.axis_names] or [1]))
+        if self.n_slot_shards < dp_extent:
+            # an explicitly requested data axis the slots cannot use should
+            # be loud, not a silently replicated cache + dead parallelism
+            warnings.warn(
+                f"max_batch={max_batch} does not divide the mesh's "
+                f"{dp_extent}-way data parallelism; decode slots shard only "
+                f"{self.n_slot_shards}-way (rest of the data axis idles and "
+                f"the cache replicates across it).  Pick max_batch a "
+                f"multiple of the data-axis extent.", stacklevel=2)
+
+        # ---- the single set of compiled entry points ----
+        # The engine cache cycles through decode / insert endlessly, so its
+        # OUTPUT sharding is pinned to the placement contract: every entry
+        # point returns the cache exactly as committed at init, which (a)
+        # keeps the slot layout stable across the serve lifetime and (b)
+        # makes the jit cache key identical call-to-call — the decode step
+        # compiles exactly once (the DESIGN.md §3 shape-stability contract
+        # now extends to shardings).  Greedy tokens replicate (host-read).
+        tok_sh = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec())
+        self._prefill = jax.jit(self._prefill_fn)
+        self._decode = jax.jit(self._decode_fn, donate_argnums=(4,),
+                               out_shardings=(tok_sh, self.cache_shardings))
+        self._prefill_insert = jax.jit(self._prefill_insert_fn,
+                                       donate_argnums=(3,),
+                                       out_shardings=(tok_sh,
+                                                      self.cache_shardings))
+        self._insert_burst = jax.jit(self._insert_burst_fn,
+                                     donate_argnums=(0,),
+                                     out_shardings=self.cache_shardings)
+
+        # ---- elastic / straggler: no-op on a single-process mesh ----
+        self.monitor = (StragglerMonitor(n_hosts=jax.process_count())
+                        if jax.process_count() > 1 else None)
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def from_devices(cls, cfg, params, *, max_batch: int, max_seq: int,
+                     devices=None, model_parallel: int = 1, pods=None,
+                     model=None):
+        """Build on the largest valid (data, model) mesh for the available
+        devices (``elastic.plan_remesh``).  One device -> the degenerate
+        (1, 1) mesh: the single-device no-op path."""
+        devices = list(devices if devices is not None else jax.devices())
+        plan = plan_remesh(len(devices), model_parallel, pods=pods)
+        mesh = make_mesh_from_plan(plan, devices)
+        return cls(cfg, params, max_batch=max_batch, max_seq=max_seq,
+                   mesh=mesh, model=model)
+
+    def remesh(self, devices=None, model_parallel: int = None):
+        """Elastic restart path: rebuild this Executor on the surviving
+        device set; params reshard via device_put (resharding IS the load
+        path, DESIGN.md §6).  Returns self when the plan already matches
+        the current mesh (single-device no-op included)."""
+        devices = list(devices if devices is not None else jax.devices())
+        mp = (model_parallel if model_parallel is not None
+              else self.mesh.shape.get("model", 1))
+        plan = plan_remesh(len(devices), mp,
+                           pods=self.mesh.shape.get("pod", None))
+        if (plan.shape == tuple(self.mesh.devices.shape)
+                and plan.axis_names == tuple(self.mesh.axis_names)
+                and devices[:plan.n_devices]
+                == list(self.mesh.devices.reshape(-1))):
+            # same plan AND same physical devices: true no-op.  A same-count
+            # survivor set with a swapped device (hot spare replacing a dead
+            # chip) must still rebuild — that is the failure this path
+            # exists for.
+            return self
+        mesh = make_mesh_from_plan(plan, devices)
+        return Executor(self.cfg, self.params, max_batch=self.max_batch,
+                        max_seq=self.max_seq, mesh=mesh, model=self.model)
+
+    def observe_step(self, step_times):
+        """Feed per-host step times to the straggler monitor; returns its
+        report, or None on the single-process no-op path."""
+        if self.monitor is None:
+            return None
+        return self.monitor.observe(step_times)
+
+    # ------------------------------------------------------------ jitted fns
+    def _prefill_fn(self, params, tokens, true_lens):
+        """(B, Sb) right-padded prompts -> (first greedy token (B,), cache)."""
+        B, S = tokens.shape
+        batch = {"tokens": tokens}
+        if self.cfg.rope == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            batch["positions"] = jnp.broadcast_to(pos[:, None], (B, 3, S))
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (B, self.cfg.enc_frames, self.cfg.d_model), self.dtype)
+        logits, cache = self.model.prefill(params, batch,
+                                           cache_len=self.max_seq,
+                                           true_lens=true_lens)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _decode_fn(self, params, token, pos, active, cache):
+        """One masked decode step over all slots; greedy next token (B,)."""
+        batch = {"token": token, "pos": pos, "active": active}
+        if self.cfg.rope == "mrope":
+            batch["positions"] = jnp.broadcast_to(
+                pos[:, None, :], (pos.shape[0], 3, 1))
+        logits, cache = self.model.decode_step(params, batch, cache,
+                                               mesh=self.mesh)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _prefill_insert_fn(self, params, tokens, true_lens, cache, slot):
+        """Fused single-admission path: prefill one sequence and write its
+        cache straight into ``slot``."""
+        first, seq_cache = self._prefill_fn(params, tokens, true_lens)
+        return first, self.model.insert_cache(cache, seq_cache, slot)
+
+    def _insert_burst_fn(self, cache, seq_cache, slots, valid):
+        """Insert row i of ``seq_cache`` into slot ``slots[i]`` for every i
+        with ``valid[i]`` (both (max_batch,), traced)."""
+        for i in range(self.max_batch):
+            row = self.model.slice_cache(seq_cache, jnp.int32(i))
+            updated = self.model.insert_cache(cache, row, slots[i])
+            cache = jax.tree_util.tree_map(
+                lambda new, old, i=i: jnp.where(valid[i], new, old),
+                updated, cache)
+        return cache
+
+    # ---------------------------------------------------------- entry points
+    def init_cache(self):
+        """The engine's batched decode cache, committed slot-over-data at
+        birth (placement happens inside ``Model.init_cache(mesh=...)``)."""
+        return self.model.init_cache(self.max_batch, self.max_seq,
+                                     dtype=self.dtype, mesh=self.mesh)
+
+    def prefill(self, tokens, true_lens):
+        return self._prefill(self.params, jnp.asarray(tokens),
+                             jnp.asarray(true_lens))
+
+    def prefill_insert(self, tokens, true_lens, cache, slot: int):
+        return self._prefill_insert(self.params, jnp.asarray(tokens),
+                                    jnp.asarray(true_lens), cache,
+                                    jnp.int32(slot))
+
+    def insert_burst(self, cache, seq_cache, slots, valid):
+        return self._insert_burst(cache, seq_cache, jnp.asarray(slots),
+                                  jnp.asarray(valid))
+
+    def decode(self, token, pos, active, cache):
+        """One decode step; inputs are committed slot-over-data so jit
+        compiles the distributed step (computation follows data).  One
+        tree-level device_put moves all three step inputs in a single
+        transfer — this runs once per generated token."""
+        put = jax.device_put(
+            {"token": jnp.asarray(token), "pos": jnp.asarray(pos),
+             "active": jnp.asarray(active)}, self._step_shardings)
+        return self._decode(self.params, put["token"], put["pos"],
+                            put["active"], cache)
+
+    # jit-cache introspection for the shape-stability tests / stats
+    def decode_cache_size(self) -> int:
+        # _cache_size is a private jax API; degrade to -1 (unknown) rather
+        # than fail the stats path if an upgrade removes it.
+        return getattr(self._decode, "_cache_size", lambda: -1)()

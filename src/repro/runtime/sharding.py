@@ -19,6 +19,7 @@ import re
 from typing import Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 FSDP_AXIS = "data"
@@ -51,6 +52,39 @@ def _divisible(n: int, mesh: Mesh, axes) -> bool:
     for a in (axes if isinstance(axes, tuple) else (axes,)):
         size *= mesh.shape[a]
     return n % size == 0
+
+
+def _pick_batch_axes(B: int, mesh: Mesh, dp):
+    """Largest prefix of the data-parallel axes that divides the batch/slot
+    dim ``B`` (falls back to any single axis, then replication).  One shared
+    decision for batch inputs, decode-slot tensors, and the KV cache, so they
+    stay co-sharded."""
+    if _divisible(B, mesh, dp):
+        return dp
+    for k in range(len(dp) - 1, 0, -1):
+        if _divisible(B, mesh, dp[:k]):
+            return dp[:k]
+    return next((a for a in dp if B % mesh.shape[a] == 0), None)
+
+
+def batch_shard_count(cfg, mesh: Mesh, B: int) -> int:
+    """How many ways the slot/batch dim of serving tensors splits on this
+    mesh — the number of per-shard slot pools the scheduler partitions over
+    (1 on a single-device mesh: the no-op path)."""
+    bax = _pick_batch_axes(B, mesh, _dp(mesh, cfg))
+    if bax is None:
+        return 1
+    axes = bax if isinstance(bax, tuple) else (bax,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def slot_shard_map(cfg, mesh: Mesh, n_slots: int) -> np.ndarray:
+    """slot -> data-shard index under GSPMD's contiguous-chunk layout for a
+    ``(n_slots, ...)`` leaf sharded over the data axes (shard i holds slots
+    [i*n/d, (i+1)*n/d)).  The mesh-aware SlotAllocator uses this to admit
+    into per-shard free slots (DESIGN.md §5)."""
+    d = batch_shard_count(cfg, mesh, n_slots)
+    return (np.arange(n_slots) * d) // n_slots
 
 
 # ---------------------------------------------------------------------------
@@ -211,12 +245,7 @@ def batch_specs(cfg, mesh: Mesh, batch_tree, seq_shard: bool = False):
     free_model = (not tp_enabled(cfg)) and "model" in mesh.axis_names
 
     def pick_bax(B):
-        if _divisible(B, mesh, dp):
-            return dp
-        for k in range(len(dp) - 1, 0, -1):
-            if _divisible(B, mesh, dp[:k]):
-                return dp[:k]
-        return next((a for a in dp if B % mesh.shape[a] == 0), None)
+        return _pick_batch_axes(B, mesh, dp)
 
     def one(path, leaf):
         name = _path_str(path)
@@ -239,79 +268,122 @@ def batch_specs(cfg, mesh: Mesh, batch_tree, seq_shard: bool = False):
     return jax.tree_util.tree_map_with_path(one, batch_tree)
 
 
-def cache_specs(cfg, mesh: Mesh, cache_tree, seq_shard: bool = False):
-    """Decode cache: batch over data axes; KV seq (ring) dim over "data" when
-    the batch can't use it (long_500k); mamba/rg-lru channel state over
-    "model"; KV heads over "model" only when divisible (MQA/GQA: replicate).
-    Leaf shapes:
-      attn k/v:   (G, B, C, Hkv, hd)    k_pos: (G, B, C)
-      mamba ssm:  (G, B, di, N)   conv: (G, B, cw-1, di)
-      rglru h:    (G, B, dr)      conv: (G, B, cw-1, dr)
+def _kv_layout(cfg, mesh: Mesh, B, C, Hkv):
+    """(batch_ax, seq_ax, head_ax) for KV cache tensors — one decision
+    shared by k, v, and k_pos so masks stay co-sharded with values."""
+    bax = _pick_batch_axes(B, mesh, _dp(mesh, cfg))
+    used = set(bax if isinstance(bax, tuple) else (bax,) if bax else ())
+    use_tp = tp_enabled(cfg)
+    head_ax = "model" if (use_tp and Hkv % mesh.shape["model"] == 0) else None
+    seq_ax = None
+    if head_ax is None:
+        # heads unshardable (MQA/GQA < TP degree): shard the KV ring dim
+        # over whichever axis is free — "model" first (it is otherwise
+        # idle for this tensor), then "data" (long_500k's batch=1).
+        cand = ("model", "data") if "model" in mesh.axis_names else ("data",)
+        for a in cand:
+            if a not in used and C % mesh.shape[a] == 0:
+                seq_ax = a
+                break
+    return bax, seq_ax, head_ax
+
+
+def _serve_leaf_spec(cfg, mesh: Mesh, name: str, shape) -> P:
+    """Spec for one BLOCK-LEVEL cache leaf (batch/slot dim on axis 0).
+    This is the core rule table; ``cache_specs`` prepends the layer-group
+    dim for stacked leaves, and ``block_cache_specs`` applies it verbatim
+    inside the decode scan (masked writes stay on-shard).
+    Block-level leaf shapes:
+      attn k/v:   (B, C, Hkv, hd)   k/v_scale: (B, C, Hkv, 1)
+      k_pos:      (B, C)
+      mamba ssm:  (B, di, N)   conv: (B, cw-1, di)
+      rglru h:    (B, dr)      conv: (B, cw-1, dr)
       enc_out:    (B, F, d)
     """
-    dp = _dp(mesh, cfg)
     use_tp = tp_enabled(cfg)
-    model_free = "model" if not use_tp else None
+    B = shape[0]
+    spec = [None] * len(shape)
+    spec[0] = _pick_batch_axes(B, mesh, _dp(mesh, cfg))
+    if name.endswith("enc_out"):
+        return P(*spec)
+    if re.search(r"(^|/)k$|(^|/)v$|k_scale$|v_scale$", name) and len(shape) == 4:
+        spec[0], spec[1], spec[2] = _kv_layout(cfg, mesh, B, shape[1],
+                                               max(cfg.n_kv_heads, 1))
+        if shape[2] % mesh.shape.get("model", 1) != 0 and spec[2]:
+            spec[2] = None
+    elif re.search(r"k_pos", name) and len(shape) == 2:
+        # same layout decision as k/v (real kv-head count matters)
+        spec[0], spec[1], _ = _kv_layout(cfg, mesh, B, shape[1],
+                                         max(cfg.n_kv_heads, 1))
+    elif re.search(r"ssm$", name) and len(shape) == 3:
+        if use_tp and _divisible(shape[1], mesh, "model"):
+            spec[1] = "model"
+    elif re.search(r"conv$", name) and len(shape) == 3:
+        if use_tp and _divisible(shape[2], mesh, "model"):
+            spec[2] = "model"
+    elif re.search(r"(^|/)h$", name) and len(shape) == 2:
+        if use_tp and _divisible(shape[1], mesh, "model"):
+            spec[1] = "model"
+    return P(*spec)
 
-    def pick_bax(B):
-        if _divisible(B, mesh, dp):
-            return dp
-        for k in range(len(dp) - 1, 0, -1):
-            if _divisible(B, mesh, dp[:k]):
-                return dp[:k]
-        return next((a for a in dp if B % mesh.shape[a] == 0), None)
 
-    def kv_layout(B, C, Hkv):
-        """(batch_ax, seq_ax, head_ax) for KV cache tensors — one decision
-        shared by k, v, and k_pos so masks stay co-sharded with values."""
-        bax = pick_bax(B)
-        used = set(bax if isinstance(bax, tuple) else (bax,) if bax else ())
-        head_ax = "model" if (use_tp and Hkv % mesh.shape["model"] == 0) else None
-        seq_ax = None
-        if head_ax is None:
-            # heads unshardable (MQA/GQA < TP degree): shard the KV ring dim
-            # over whichever axis is free — "model" first (it is otherwise
-            # idle for this tensor), then "data" (long_500k's batch=1).
-            cand = ("model", "data") if "model" in mesh.axis_names else ("data",)
-            for a in cand:
-                if a not in used and C % mesh.shape[a] == 0:
-                    seq_ax = a
-                    break
-        return bax, seq_ax, head_ax
-
+def cache_specs(cfg, mesh: Mesh, cache_tree, seq_shard: bool = False):
+    """Decode cache: batch/slot dim over the data axes; KV seq (ring) dim
+    over "data" when the batch can't use it (long_500k); mamba/rg-lru
+    channel state over "model"; KV heads over "model" only when divisible
+    (MQA/GQA: replicate).  Stack leaves carry the layer-group dim first
+    (always replicated); the per-leaf rules live in ``_serve_leaf_spec``.
+    """
     def one(path, leaf):
         name = _path_str(path)
         if leaf.ndim == 0:
             return P()
-        shape = leaf.shape
-        if name.endswith("enc_out"):
-            return P(pick_bax(shape[0]), None, None)
-        b_idx = 1  # stack caches always carry the group dim first
-        B = shape[b_idx]
-        bax = pick_bax(B)
-        spec = [None] * leaf.ndim
-        spec[b_idx] = bax
-        if re.search(r"/k$|/v$|k_scale$|v_scale$", name) and leaf.ndim == 5:
-            spec[1], spec[2], spec[3] = kv_layout(
-                B, shape[2], max(cfg.n_kv_heads, 1))
-            if shape[3] % mesh.shape.get("model", 1) != 0 and spec[3]:
-                spec[3] = None
-        elif re.search(r"k_pos", name) and leaf.ndim == 3:
-            # same layout decision as k/v (real kv-head count matters)
-            spec[1], spec[2], _ = kv_layout(B, shape[2],
-                                            max(cfg.n_kv_heads, 1))
-        elif re.search(r"ssm$", name) and leaf.ndim == 4:
-            if use_tp and _divisible(shape[2], mesh, "model"):
-                spec[2] = "model"
-        elif re.search(r"conv$", name) and leaf.ndim == 4:
-            if use_tp and _divisible(shape[3], mesh, "model"):
-                spec[3] = "model"
-        elif re.search(r"/h$", name) and leaf.ndim == 3:
-            if use_tp and _divisible(shape[2], mesh, "model"):
-                spec[2] = "model"
-        return P(*spec)
+        if re.search(r"(^|/)b\d+/", name):
+            # scanned group leaf: replicated layer-group dim leads
+            return P(None, *_serve_leaf_spec(cfg, mesh, name, leaf.shape[1:]))
+        # enc_out / unrolled tail-block leaves: batch is axis 0 already
+        return _serve_leaf_spec(cfg, mesh, name, leaf.shape)
 
     return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def block_cache_specs(cfg, mesh: Mesh, block_tree):
+    """Specs for one block's cache dict as seen INSIDE the decode scan
+    (no leading group dim).  Used by the masked-write constraint the
+    executor threads through ``Model.decode_step`` (DESIGN.md §5)."""
+    def one(path, leaf):
+        name = _path_str(path)
+        if leaf.ndim == 0:
+            return P()
+        return _serve_leaf_spec(cfg, mesh, name, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, block_tree)
+
+
+def constrain_block_cache(cfg, mesh: Mesh, block_tree):
+    """with_sharding_constraint over one block's cache dict (decode scan
+    body): pins the masked scatter writes to the slot-over-data layout so
+    the SPMD partitioner cannot fall back to replicate-and-gather.  The
+    executor threads this through ``Model.decode_step`` -> transformer ->
+    attention; it is a no-op on a single-device mesh."""
+    specs = block_cache_specs(cfg, mesh, block_tree)
+    return jax.tree_util.tree_map(
+        lambda leaf, s: jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, s)),
+        block_tree, specs)
+
+
+def serve_batch_specs(cfg, mesh: Mesh, batch_tree):
+    """Decode-step inputs (token (B, 1), pos (B, 1) / positions (B, 3, 1),
+    active (B,)): slot dim over the data axes, everything else replicated —
+    co-sharded with the slot dim of the decode cache."""
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) == 0:
+            return P()
+        bax = _pick_batch_axes(leaf.shape[0], mesh, _dp(mesh, cfg))
+        return P(bax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(one, batch_tree)
 
 
 def to_shardings(spec_tree, mesh: Mesh):

@@ -145,6 +145,144 @@ def test_elastic_restart_resharded():
     assert "OK 1" in out
 
 
+def test_executor_prefill_decode_matches_single_device():
+    """Executor on a (4, 2) data x model mesh: prefill logits and a decode
+    step must match the 1-device Executor (allclose at the serving dtype)
+    for BOTH qat-float and PSI-packed (bit-plane) params."""
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.launch.mesh import make_mesh
+        from repro.models import build_model
+        from repro.runtime.executor import Executor
+
+        base = reduced_config(get_config("qwen3-8b"))
+        model = build_model(base)
+        p32 = model.init(jax.random.PRNGKey(0))
+        flavors = {
+            "qat-float": (dataclasses.replace(base, quant_mode="qat8"), p32),
+            "psi-packed": (dataclasses.replace(base, quant_mode="psi5"),
+                           model.quantize(p32, 5, pack=True)),
+        }
+        mesh8 = make_mesh((4, 2), ("data", "model"))
+        toks = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                               base.vocab_size), np.int32)
+        tl = np.full((4,), 16, np.int32)
+        for name, (cfg, params) in flavors.items():
+            mdl = build_model(cfg)
+            ex1 = Executor(cfg, params, max_batch=4, max_seq=32)
+            ex8 = Executor(cfg, params, max_batch=4, max_seq=32, mesh=mesh8)
+            assert ex8.n_slot_shards == 4, ex8.n_slot_shards
+            # raw prefill logits: sharded == single-device (f32 on CPU)
+            lg1, _ = jax.jit(mdl.prefill)(ex1.params,
+                                          {"tokens": jnp.asarray(toks)})
+            lg8, _ = jax.jit(mdl.prefill)(ex8.params,
+                                          {"tokens": jnp.asarray(toks)})
+            np.testing.assert_allclose(np.asarray(lg1, np.float32),
+                                       np.asarray(lg8, np.float32),
+                                       rtol=2e-3, atol=2e-3)
+            f1, c1 = ex1.prefill(toks, tl)
+            f8, c8 = ex8.prefill(toks, tl)
+            np.testing.assert_array_equal(np.asarray(f1), np.asarray(f8))
+            # one decode step from the prefilled state, all slots active
+            cache1, cache8 = ex1.init_cache(), ex8.init_cache()
+            slots = np.arange(4, dtype=np.int32)
+            cache1 = ex1.insert_burst(cache1, c1, slots, np.ones(4, bool))
+            cache8 = ex8.insert_burst(cache8, c8, slots, np.ones(4, bool))
+            tok = np.asarray(f1).reshape(4, 1)
+            pos = np.full((4, 1), 16, np.int32)
+            act = np.ones((4,), bool)
+            t1, _ = ex1.decode(tok, pos, act, cache1)
+            t8, _ = ex8.decode(tok, pos, act, cache8)
+            np.testing.assert_array_equal(np.asarray(t1), np.asarray(t8))
+            print("OK", name)
+    """)
+    assert "OK qat-float" in out and "OK psi-packed" in out
+
+
+def test_sharded_serving_tokens_identical():
+    """Full serve loop on a forced 8-device (4, 2) mesh: slots partition
+    over the data axis and every request's token stream is identical to the
+    single-device engine (greedy decode; scheduling/sharding may change
+    *where* work runs, never the tokens)."""
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch.scheduler import Request
+        from repro.launch.serve import Server
+        from repro.models import build_model
+
+        cfg = reduced_config(get_config("qwen3-8b"))
+        model = build_model(cfg)
+        params = model.quantize(model.init(jax.random.PRNGKey(0)), 8)
+        cfg = dataclasses.replace(cfg, quant_mode="psi8")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(8,))
+                   .astype(np.int32) for _ in range(6)]
+        def mk():
+            return [Request(rid=i, prompt=prompts[i], max_new=mn,
+                            arrival_s=0.0)
+                    for i, mn in enumerate([3, 7, 2, 5, 4, 6])]
+
+        s1 = Server(cfg, params, max_batch=4, max_seq=64)
+        d1, st1 = s1.serve(mk(), continuous=True)
+        s8 = Server(cfg, params, max_batch=4, max_seq=64,
+                    mesh=make_mesh((4, 2), ("data", "model")))
+        d8, st8 = s8.serve(mk(), continuous=True)
+        assert st1["slot_shards"] == 1 and st8["slot_shards"] == 4
+        assert st8["decode_compiles"] == 1, st8["decode_compiles"]
+        t1 = {r.rid: r.tokens for r in d1}
+        t8 = {r.rid: r.tokens for r in d8}
+        assert t1 == t8, (t1, t8)
+        # slots really spread over the data axis: the first max_batch
+        # admissions land one per shard
+        shards = {s8.executor.slot_shards[r.slot]
+                  for r in d8 if r.rid < 4}
+        assert shards == {0, 1, 2, 3}, shards
+        print("OK", st8["slot_shards"])
+    """)
+    assert "OK 4" in out
+
+
+def test_executor_elastic_remesh_and_straggler_noop():
+    """The executor's elastic hooks: from_devices sizes the mesh with
+    plan_remesh, remesh() is a no-op when the plan matches, and the
+    straggler monitor is None (no-op) on a single-process run."""
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.models import build_model
+        from repro.runtime.executor import Executor
+
+        cfg = reduced_config(get_config("qwen3-8b"))
+        model = build_model(cfg)
+        params = model.quantize(model.init(jax.random.PRNGKey(0)), 8)
+        cfg = dataclasses.replace(cfg, quant_mode="psi8")
+
+        ex = Executor.from_devices(cfg, params, max_batch=4, max_seq=32,
+                                   model_parallel=2)
+        assert dict(ex.mesh.shape) == {"data": 4, "model": 2}, ex.mesh.shape
+        assert ex.remesh() is ex                      # plan matches: no-op
+        ex4 = ex.remesh(devices=jax.devices()[:4])    # shrink data axis
+        assert dict(ex4.mesh.shape) == {"data": 2, "model": 2}
+        # same count but a swapped device (hot spare replacing a dead
+        # chip): the plan shape matches yet remesh MUST rebuild
+        ex_sw = ex4.remesh(devices=jax.devices()[4:8])
+        assert ex_sw is not ex4
+        assert dict(ex_sw.mesh.shape) == {"data": 2, "model": 2}
+        assert ex.observe_step([1.0]) is None         # single-process no-op
+
+        ex1 = Executor.from_devices(cfg, params, max_batch=4, max_seq=32,
+                                    devices=jax.devices()[:1])
+        assert dict(ex1.mesh.shape) == {"data": 1, "model": 1}
+        assert ex1.n_slot_shards == 1 and ex1.monitor is None
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_dryrun_entry_on_tiny_mesh():
     """The dry-run machinery itself (build_step -> lower -> compile ->
     roofline report) on an 8-device mesh with a reduced arch."""

@@ -102,6 +102,87 @@ def test_ops_dispatch_cpu_matches_interpret(monkeypatch):
     assert got_ref.shape == (4, 10, 48)
 
 
+class TestDecodeDispatch:
+    """Small-M tile dispatch: the decode step (M = active slots <= 16) must
+    not pad M up to the 128-row MXU tile."""
+
+    def test_pick_bm_tile_floor_and_cap(self):
+        assert pk.pick_bm(1, jnp.float32) == 8
+        assert pk.pick_bm(8, jnp.float32) == 8
+        assert pk.pick_bm(16, jnp.float32) == 16
+        assert pk.pick_bm(1, jnp.bfloat16) == 16     # bf16 sublane floor
+        assert pk.pick_bm(16, jnp.bfloat16) == 16
+        assert pk.pick_bm(128, jnp.float32) == 128
+        assert pk.pick_bm(4096, jnp.bfloat16) == 128
+
+    def test_padded_macs_ratio_at_decode_shapes(self):
+        for M in (1, 4, 8, 16):
+            old = pk.padded_macs(M, 2048, 2048)
+            new = pk.padded_macs(M, 2048, 2048,
+                                 bm=pk.pick_bm(M, jnp.float32))
+            assert old / new >= 2.0, (M, old, new)
+
+    @pytest.mark.parametrize("M", [1, 4, 16])
+    def test_small_m_tiles_match_ref(self, M):
+        rng = np.random.default_rng(M)
+        x = jnp.asarray(rng.normal(size=(M, 256)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(256, 192)).astype(np.float32))
+        codes, scale = _quant(w, 8)
+        bm = pk.pick_bm(M, x.dtype)
+        got = pk.psi_matmul_int8(x, codes, scale, bm=bm, interpret=True)
+        want = ref.psi_matmul_int8_ref(x, codes, scale)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+class TestGpuFastPath:
+    """The dequantize-then-einsum route for non-TPU accelerators must agree
+    with the oracle (scale folded into W commutes with the contraction)."""
+
+    def test_int8_dequant_matches_oracle(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(5, 128)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(128, 96)).astype(np.float32))
+        codes, scale = _quant(w, 8)
+        got = ref.psi_matmul_int8_dequant(x, codes, scale)
+        want = ref.psi_matmul_int8_ref(x, codes, scale)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_int5_dequant_matches_oracle(self):
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(64, 40)).astype(np.float32))
+        q = psi.quantize_weights(w, 5, axis=0)
+        planes = psi.pack_int5(q.codes)
+        scale = q.scale.reshape(-1)
+        got = ref.psi_matmul_int5_dequant(x, planes, scale)
+        want = ref.psi_matmul_int5_ref(x, planes, scale)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_backend_routing_is_explicit(self, monkeypatch):
+        """A gpu backend must route to the dequant fast path, never the
+        bit-plane oracle loop or (worse) a silent CPU fall-through."""
+        calls = []
+        monkeypatch.setattr(ops, "_backend", lambda: "gpu")
+        monkeypatch.setattr(
+            ops._ref, "psi_matmul_int5_dequant",
+            lambda *a: calls.append("dequant5") or ref.psi_matmul_int5_ref(*a))
+        monkeypatch.setattr(
+            ops._ref, "psi_matmul_int8_dequant",
+            lambda *a: calls.append("dequant8") or ref.psi_matmul_int8_ref(*a))
+        rng = np.random.default_rng(9)
+        x = jnp.asarray(rng.normal(size=(2, 64)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(64, 40)).astype(np.float32))
+        q5 = psi.quantize_weights(w, 5, axis=0)
+        ops.psi_matmul(x, {"planes": psi.pack_int5(q5.codes),
+                           "scale": q5.scale})
+        q8 = psi.quantize_weights(w, 8, axis=0)
+        ops.psi_matmul(x, {"codes": q8.codes, "scale": q8.scale})
+        assert calls == ["dequant5", "dequant8"]
+
+
 def test_kernel_matches_float_matmul_within_quant_error():
     """End-to-end sanity: the PSI kernel approximates the float matmul with
     per-channel-quantization error bounds (not exactness)."""

@@ -63,6 +63,42 @@ class TestScheduler:
         with pytest.raises(ValueError):
             alloc.release(s)
 
+    def test_allocator_shard_balanced(self):
+        """Sharded pools (the Executor's slot-over-data layout): admission
+        takes from the shard with the most free slots, lowest slot within
+        the shard — successive admissions spread one per data shard."""
+        alloc = SlotAllocator(8, n_shards=4)
+        assert alloc.shard_of == [0, 0, 1, 1, 2, 2, 3, 3]
+        first = [alloc.alloc(i) for i in range(4)]
+        assert first == [0, 2, 4, 6]             # one slot per shard
+        rest = [alloc.alloc(i) for i in range(4, 8)]
+        assert rest == [1, 3, 5, 7]
+        assert alloc.free_per_shard() == [0, 0, 0, 0]
+        alloc.release(4)
+        alloc.release(5)
+        alloc.release(2)
+        # shard 2 has the most free slots -> next admission lands there
+        assert alloc.alloc(9) == 4
+        assert alloc.free_per_shard() == [0, 1, 1, 0]
+
+    def test_allocator_single_shard_is_lowest_first(self):
+        """n_shards=1 (single-device no-op path) is exactly the classic
+        lowest-index-first allocator."""
+        alloc = SlotAllocator(3)
+        assert [alloc.alloc(i) for i in range(3)] == [0, 1, 2]
+        alloc.release(2)
+        alloc.release(0)
+        assert alloc.alloc(7) == 0
+
+    def test_scheduler_partitions_slots_across_shards(self):
+        reqs = _requests([(0.0, 4)] * 4)
+        sched = Scheduler(reqs, max_batch=4, n_shards=2)
+        sched.poll(0.0)
+        admitted = sched.admit(0.0)
+        shards = [sched.slots.shard_of[s] for s, _ in admitted]
+        assert sorted(shards) == [0, 0, 1, 1]
+        assert [s for s, _ in admitted] == [0, 2, 1, 3]
+
     def test_done_and_accounting(self):
         reqs = _requests([(0.0, 2), (0.05, 2)])
         sched = Scheduler(reqs, max_batch=1)
