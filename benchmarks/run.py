@@ -10,13 +10,13 @@ import time
 
 def main() -> None:
     from benchmarks import (fig8_latency, fig9_sram, kernel_bench,
-                            serve_bench, table1_quant, table2_perf,
-                            table3_compare)
+                            quant_sweep, serve_bench, table1_quant,
+                            table2_perf, table3_compare)
     from benchmarks.roofline import full_table
 
     rows = []
     for mod in (table1_quant, table2_perf, table3_compare, fig8_latency,
-                fig9_sram, kernel_bench, serve_bench):
+                fig9_sram, kernel_bench, serve_bench, quant_sweep):
         print(f"\n=== {mod.__name__} ===")
         rows.extend(mod.run())
 

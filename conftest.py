@@ -7,7 +7,8 @@ suite runs in — cannot pip-install dev dependencies, and an absent
 ``hypothesis`` used to kill the whole suite at collection.  This shim
 registers a minimal, deterministic stand-in implementing exactly the API the
 tests use (``given``, ``settings``, ``strategies.integers``,
-``strategies.lists``): each property runs over the strategy's boundary values
+``strategies.lists``, ``strategies.sampled_from``): each property runs over
+the strategy's boundary values
 followed by seeded-random samples, so the suite stays meaningful (if less
 adversarial than real hypothesis shrinking) and fully reproducible.
 """
@@ -38,6 +39,10 @@ def _install_hypothesis_fallback():
             bound.append(0)
         return _Strategy(bound,
                          lambda rng: rng.randint(min_value, max_value))
+
+    def sampled_from(values):
+        values = list(values)
+        return _Strategy(values, lambda rng: rng.choice(values))
 
     def lists(elements, min_size=0, max_size=10):
         def sample(rng):
@@ -79,6 +84,7 @@ def _install_hypothesis_fallback():
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = integers
     st_mod.lists = lists
+    st_mod.sampled_from = sampled_from
     mod.strategies = st_mod
     mod.__is_repro_fallback__ = True
     sys.modules["hypothesis"] = mod

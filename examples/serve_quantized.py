@@ -24,11 +24,17 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
 
     base_bytes = quantized_bytes(params)
-    for quant, bits, pack in (("none", None, False), ("psi8", 8, False),
-                              ("psi5", 5, True)):
-        p = params if bits is None else model.quantize(params, bits, pack=pack)
-        scfg = cfg if bits is None else dataclasses.replace(
-            cfg, quant_mode=quant)
+    # uniform widths from the PsiFormat registry, plus a mixed-precision
+    # policy (embeddings keep 8 bits, the bulk rides the sub-5-bit frontier)
+    formats = (("none", dict()),
+               ("psi8", dict(bits=8)),
+               ("psi5", dict(bits=5, pack=True)),
+               ("psi4", dict(bits=4, pack=True)),
+               ("mixed", dict(policy={"embed": 8, "default": 4}, pack=True)))
+    for quant, spec in formats:
+        p = params if not spec else model.quantize(params, **spec)
+        scfg = cfg if not spec else dataclasses.replace(
+            cfg, quant_mode=quant if quant.startswith("psi") else "none")
         reqs = poisson_trace(4, rate_rps=500.0, prompt_len=24, max_new=8,
                              vocab_size=cfg.vocab_size, seed=0)
         server = Server(scfg, p, max_batch=4, max_seq=48)

@@ -29,10 +29,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.psi import QuantizedTensor, make_format
+
 
 def _flatten(tree, prefix=""):
     out = {}
-    if isinstance(tree, dict):
+    if isinstance(tree, QuantizedTensor):
+        # Typed serving leaf: persist storage + scale plus a "@psi" metadata
+        # record (bits, packed, n_psi, max_exp) so restore rebuilds the
+        # QuantizedTensor with its *exact* PsiFormat — including custom
+        # registrations whose term budget differs from the default — and the
+        # pytree structure survives the disk round-trip
+        # (restore-with-shardings tree_maps against spec trees).
+        out[prefix + "@psi"] = np.asarray(
+            [tree.fmt.bits, int(tree.packed), tree.fmt.n_psi,
+             tree.fmt.max_exp], np.int32)
+        out[prefix + "data"] = np.asarray(tree.data)
+        out[prefix + "scale"] = np.asarray(tree.scale)
+    elif isinstance(tree, dict):
         items = tree.items()
         for k, v in items:
             out.update(_flatten(v, f"{prefix}{k}/"))
@@ -61,6 +75,17 @@ def _unflatten(flat: Dict[str, np.ndarray]):
         if not isinstance(node, dict):
             return node
         keys = set(node)
+        if "@psi" in keys:
+            meta = [int(v) for v in node["@psi"]]
+            if len(meta) != 4:
+                raise ValueError(
+                    f"corrupt '@psi' record (expected [bits, packed, n_psi, "
+                    f"max_exp], got {meta})")
+            bits, packed, n_psi, max_exp = meta
+            return QuantizedTensor(
+                node["data"], node["scale"],
+                make_format(bits, n_psi=n_psi, max_exp=max_exp),
+                bool(packed))
         is_tuple = "@tuple" in keys
         keys.discard("@tuple")
         if "@emptylist" in keys and len(keys) == 1:

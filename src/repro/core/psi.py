@@ -11,65 +11,174 @@ into 2N signed powers of two::
 * INT8 weights use 4 PSIs (N=2) and the decomposition is exact for all of
   [-128, 127].
 
+The paper's headline is "scalable integer weights less than 1-byte", so the
+two paper points are instances of a registry: :class:`PsiFormat` describes
+any width in [2, 8] bits — term budget, exponent range, derived decomposition
+table, exactness + worst-case-error metadata, and sub-byte bit-plane packing.
+``get_format(bits)`` / ``get_format("psi4")`` look formats up; serving weights
+travel as :class:`QuantizedTensor` pytree leaves that carry their format as
+static metadata, so every consumer (kernels, sharding, checkpoints) dispatches
+on type + format instead of duck-typed dict keys.
+
 On the TMA ASIC the decomposition removes multipliers.  On TPU (our target) the
 same decomposition is used as a *weight-compression format*: the stored code is
-5 or 8 bits per weight instead of 16, and the Pallas kernel reconstructs the
+``bits`` per weight instead of 16, and the Pallas kernel reconstructs the
 weight tile inside VMEM with shifts (see ``repro.kernels.psi_matmul``), cutting
 HBM weight traffic — the dominant cost of memory-bound inference.
 
-Everything here is exact-integer bookkeeping; tables are built once in numpy at
-import time (32 + 256 entries) and the runtime paths are pure ``jnp``.
+Everything here is exact-integer bookkeeping; tables are built once in numpy
+per registered format (lazily, <= 256 entries each) and the runtime paths are
+pure ``jnp``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+
 # ---------------------------------------------------------------------------
-# Integer ranges per weight bit-width (paper: INT5 -> 2 PSIs, INT8 -> 4 PSIs).
+# PsiFormat: one registered weight width.
 # ---------------------------------------------------------------------------
-INT5_MIN, INT5_MAX = -16, 15
-INT8_MIN, INT8_MAX = -128, 127
+@dataclasses.dataclass(frozen=True)
+class PsiFormat:
+    """One PSI weight format: INT<bits> codes decomposed into <= n_psi signed
+    powers of two with exponents in [0, max_exp].
 
-N_PSI = {5: 2, 8: 4}
-# Exponent range: INT5 needs 2^4 (15 = 16 - 1); INT8 needs 2^7.
-MAX_EXP = {5: 4, 8: 7}
+    Instances are immutable and hashable — a ``QuantizedTensor`` carries its
+    format as static pytree metadata (it participates in jit cache keys and
+    pytree structure equality).  Error metadata is computed exhaustively at
+    registration from the decomposition table, so ``worst_case_rel_error`` is
+    a *certified* bound, not a declared one.
+    """
+    bits: int                    # stored weight width, 2..8
+    n_psi: int                   # signed-power term budget (paper: 2 for
+    #                              INT5, 4 for INT8)
+    max_exp: int                 # exponent range [0, max_exp]
+    w_min: int                   # -2^(bits-1)
+    w_max: int                   # 2^(bits-1) - 1
+    exact: bool                  # every code reconstructs exactly
+    worst_case_rel_error: float  # max |w' - w| / max(|w|, 1) over the range
+
+    @property
+    def name(self) -> str:
+        return f"psi{self.bits}"
+
+    @property
+    def qmax(self) -> int:
+        return self.w_max
+
+    @property
+    def offset(self) -> int:
+        """Offset-binary bias for sub-byte packing: code + offset in
+        [0, 2^bits)."""
+        return 1 << (self.bits - 1)
+
+    @property
+    def sub_byte(self) -> bool:
+        return self.bits < 8
+
+    def bytes_per_weight(self, packed: bool = True) -> float:
+        """HBM bytes per weight in serving format (the roofline 'memory'
+        input): bits/8 when bit-plane packed, one int8 byte otherwise."""
+        return self.bits / 8.0 if (packed and self.sub_byte) else 1.0
+
+    # -- derived tables (built lazily, cached per (bits, n_psi, max_exp)) --
+    def decomposition_table(self) -> np.ndarray:
+        return _decomposition_table(self.bits, self.n_psi, self.max_exp)
+
+    def value_table(self) -> np.ndarray:
+        return _value_table(self.bits, self.n_psi, self.max_exp)
 
 
-def _signed_power_values(max_exp: int) -> np.ndarray:
-    """All values of s * 2^n for s in {-1,0,1}, n in [0, max_exp]."""
-    powers = 2 ** np.arange(max_exp + 1)
-    return np.unique(np.concatenate([[0], powers, -powers]))
+# Term budgets per width.  The paper pins INT5 -> 2 PSIs (~9 % worst case at
+# +-11/+-13) and INT8 -> 4 PSIs (exact); intermediate widths interpolate the
+# same bits/2 scaling, except INT3 which needs its second term to stay exact
+# (3 = 2 + 1).  Every entry's exactness/error is certified at registration.
+DEFAULT_N_PSI = {2: 1, 3: 2, 4: 2, 5: 2, 6: 3, 7: 3, 8: 4}
+
+_REGISTRY: Dict[int, PsiFormat] = {}
+
+FormatLike = Union[int, str, PsiFormat]
 
 
+def make_format(bits: int, n_psi: Optional[int] = None,
+                max_exp: Optional[int] = None) -> PsiFormat:
+    """Build (without registering) the PSI format for a weight width.
+
+    Derives the integer range from ``bits``, builds the decomposition table,
+    and certifies exactness / worst-case relative error exhaustively.  Used
+    by :func:`register_format` and by checkpoint restore, which must rebuild
+    a leaf's *exact* format (possibly a non-default ``n_psi``/``max_exp``)
+    without touching the registry.
+    """
+    if not 2 <= bits <= 8:
+        raise ValueError(f"PSI weight width must be in [2, 8] bits, got {bits}")
+    n_psi = DEFAULT_N_PSI[bits] if n_psi is None else n_psi
+    max_exp = bits - 1 if max_exp is None else max_exp
+    w_min, w_max = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    vals = _value_table(bits, n_psi, max_exp)
+    w = np.arange(w_min, w_max + 1)
+    rel = np.abs(vals - w) / np.maximum(np.abs(w), 1)
+    return PsiFormat(bits=bits, n_psi=n_psi, max_exp=max_exp,
+                     w_min=w_min, w_max=w_max,
+                     exact=bool(np.array_equal(vals, w)),
+                     worst_case_rel_error=float(rel.max()))
+
+
+def register_format(bits: int, n_psi: Optional[int] = None,
+                    max_exp: Optional[int] = None) -> PsiFormat:
+    """Register (or re-register) the PSI format for a weight width."""
+    fmt = make_format(bits, n_psi, max_exp)
+    _REGISTRY[bits] = fmt
+    return fmt
+
+
+def get_format(spec: FormatLike) -> PsiFormat:
+    """Look a format up by bits (5), name ("psi5"), or pass one through."""
+    if isinstance(spec, PsiFormat):
+        return spec
+    if isinstance(spec, str):
+        if not spec.startswith("psi"):
+            raise ValueError(f"unknown PSI format name {spec!r}")
+        spec = int(spec[3:])
+    if spec not in _REGISTRY:
+        raise ValueError(
+            f"no PSI format registered for {spec} bits "
+            f"(registered: {sorted(_REGISTRY)})")
+    return _REGISTRY[spec]
+
+
+def registered_bits() -> Tuple[int, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Decomposition tables (exact integer bookkeeping, numpy, built lazily).
+# ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _best_decomposition_table(bits: int) -> np.ndarray:
-    """For every integer in the INT<bits> range, the best <=N_PSI-term signed
+def _decomposition_table(bits: int, n_psi: int, max_exp: int) -> np.ndarray:
+    """For every integer in the INT<bits> range, the best <= n_psi-term signed
     power-of-two decomposition (minimum absolute error; ties broken toward the
     smaller reconstructed magnitude, matching a truncating hardware rounder).
 
     Returns int16 array of shape (range_size, 2 * n_psi): [s_1, n_1, ..., s_N, n_N]
     indexed by (w - w_min).  Unused terms have s=0, n=0.
     """
-    n_psi = N_PSI[bits]
-    max_exp = MAX_EXP[bits]
-    w_min = INT5_MIN if bits == 5 else INT8_MIN
-    w_max = INT5_MAX if bits == 5 else INT8_MAX
+    w_min, w_max = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
     terms = []  # (value, sign, exp) including the zero term
     terms.append((0, 0, 0))
     for n in range(max_exp + 1):
         terms.append((1 << n, 1, n))
         terms.append((-(1 << n), -1, n))
 
-    # Dynamic programming over number of terms: best_k[v] = decomposition of v
-    # with exactly <= k terms.  Value space is bounded by n_psi * 2^max_exp.
+    # Dynamic programming over number of terms: reachable[v] = decomposition
+    # of v with <= k terms.  Value space is bounded by n_psi * 2^max_exp.
     vmax = n_psi * (1 << max_exp)
-    # reachable[v + vmax] = tuple of (s, n) pairs, or None
     reachable = {0: ()}
     for _ in range(n_psi):
         new = dict(reachable)
@@ -101,28 +210,40 @@ def _best_decomposition_table(bits: int) -> np.ndarray:
 
 
 @functools.lru_cache(maxsize=None)
-def psi_value_table(bits: int) -> np.ndarray:
+def _value_table(bits: int, n_psi: int, max_exp: int) -> np.ndarray:
+    tab = _decomposition_table(bits, n_psi, max_exp)
+    signs = tab[:, 0::2].astype(np.int64)
+    exps = tab[:, 1::2].astype(np.int64)
+    return np.sum(signs * (1 << exps), axis=1).astype(np.int32)
+
+
+def _best_decomposition_table(bits: int, n_psi: Optional[int] = None) -> np.ndarray:
+    """Registered-format decomposition table (``n_psi`` overrides the term
+    budget — used by the monotone-error property tests)."""
+    fmt = get_format(bits)
+    return _decomposition_table(fmt.bits, n_psi or fmt.n_psi, fmt.max_exp)
+
+
+def psi_value_table(bits: FormatLike, n_psi: Optional[int] = None) -> np.ndarray:
     """Reconstructed integer value for every code in the INT<bits> range.
 
     ``psi_value_table(5)[w + 16]`` is the integer the hardware actually
     multiplies by when the stored weight is ``w`` — equal to ``w`` everywhere
     except +-11 -> +-10 and +-13 -> +-12 (the paper's ~9 % worst case).
     """
-    tab = _best_decomposition_table(bits)
-    signs = tab[:, 0::2].astype(np.int64)
-    exps = tab[:, 1::2].astype(np.int64)
-    return np.sum(signs * (1 << exps), axis=1).astype(np.int32)
+    fmt = get_format(bits)
+    return _value_table(fmt.bits, n_psi or fmt.n_psi, fmt.max_exp)
 
 
-def psi_decompose_int(w: jnp.ndarray, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def psi_decompose_int(w: jnp.ndarray, bits: FormatLike) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Decompose integer weights into (signs, exps), each ``(n_psi,) + w.shape``.
 
     Mirrors the paper's Weight-decomposition block (Fig. 6): the stored integer
     weight is decoded into the per-PSI (s, n) register values fed to the SAMs.
     """
-    w_min = INT5_MIN if bits == 5 else INT8_MIN
-    tab = jnp.asarray(_best_decomposition_table(bits))
-    rows = tab[w.astype(jnp.int32) - w_min]
+    fmt = get_format(bits)
+    tab = jnp.asarray(fmt.decomposition_table())
+    rows = tab[w.astype(jnp.int32) - fmt.w_min]
     signs = jnp.moveaxis(rows[..., 0::2], -1, 0).astype(jnp.int32)
     exps = jnp.moveaxis(rows[..., 1::2], -1, 0).astype(jnp.int32)
     return signs, exps
@@ -136,12 +257,12 @@ def psi_reconstruct(signs: jnp.ndarray, exps: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(signs * (1 << exps), axis=0).astype(jnp.int32)
 
 
-def psi_project_int(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+def psi_project_int(w: jnp.ndarray, bits: FormatLike) -> jnp.ndarray:
     """Project integer weights onto the PSI-representable set (what the
     hardware effectively multiplies by)."""
-    w_min = INT5_MIN if bits == 5 else INT8_MIN
-    tab = jnp.asarray(psi_value_table(bits))
-    return tab[w.astype(jnp.int32) - w_min]
+    fmt = get_format(bits)
+    tab = jnp.asarray(fmt.value_table())
+    return tab[w.astype(jnp.int32) - fmt.w_min]
 
 
 def sam_multiply(x: jnp.ndarray, signs: jnp.ndarray, exps: jnp.ndarray) -> jnp.ndarray:
@@ -170,55 +291,116 @@ def moa_sign_extension_sum(operands: jnp.ndarray, in_bits: int, out_bits: int) -
 
 
 # ---------------------------------------------------------------------------
-# Float-weight quantization (per-channel symmetric) + QAT straight-through.
+# QuantizedTensor: the typed serving-format weight leaf.
 # ---------------------------------------------------------------------------
 @jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class PsiQuantized:
-    """A weight tensor in PSI format: integer codes + per-channel scale.
+@dataclasses.dataclass(eq=False)
+class QuantizedTensor:
+    """A weight tensor in PSI serving format: integer storage + per-channel
+    scale + its :class:`PsiFormat` as static pytree metadata.
 
-    ``codes`` are *already projected* onto the PSI-representable set, so
-    dequantization is ``codes * scale`` — identical to what the SAM array
-    computes (reconstruct-by-shifts), see DESIGN.md §2.
+    Storage is one of two layouts, selected by ``packed``:
+
+    * unpacked — ``data`` is int8 codes ``(..., K, N)``, already *projected*
+      onto the PSI-representable set, so dequantization is ``codes * scale``
+      — identical to what the SAM array computes (reconstruct-by-shifts,
+      DESIGN.md §2);
+    * packed — ``data`` is uint8 bit-planes ``(..., bits, K//8, N)``
+      (exactly ``bits/8`` bytes per weight in HBM).
+
+    Registered as a pytree node: (data, scale) are children, (fmt, packed) are
+    aux — so QuantizedTensor leaves flow through jit, scan (layer stacks slice
+    along the leading dim), device_put, and eval_shape unchanged, and every
+    consumer dispatches on ``isinstance(leaf, QuantizedTensor)`` + ``leaf.fmt``
+    instead of sniffing dict keys.
     """
-    codes: jnp.ndarray   # int8, PSI-representable values
-    scale: jnp.ndarray   # f32, broadcastable to codes.shape
-    bits: int            # 5 or 8
+    data: jnp.ndarray    # int8 codes or uint8 bit-planes (see ``packed``)
+    scale: jnp.ndarray   # f32, broadcastable to the code shape
+    fmt: PsiFormat
+    packed: bool = False
 
-    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+    # ------------------------------------------------------------ properties
+    @property
+    def bits(self) -> int:
+        return self.fmt.bits
+
+    @property
+    def codes(self) -> jnp.ndarray:
+        """Int8 codes ``(..., K, N)`` — unpacks bit-planes on demand."""
+        if self.packed:
+            return unpack_codes(self.data, self.fmt)
+        return self.data
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Logical (dense-weight) shape."""
+        if self.packed:
+            *lead, _, kb, n = self.data.shape
+            return (*lead, kb * 8, n)
+        return tuple(self.data.shape)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    # ------------------------------------------------------------ conversions
+    def dequantize(self, dtype=jnp.bfloat16) -> jnp.ndarray:
+        """The one shared dequantization: codes * scale, cast to ``dtype``."""
         return (self.codes.astype(jnp.float32) * self.scale).astype(dtype)
 
+    def gather_rows(self, ids: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+        """Dequantize only the gathered rows ``(V, D)[ids] -> (..., D)`` —
+        the embedding-lookup path.  Packed tables unpack per gathered row
+        (bit ``ids % 8`` of byte ``ids // 8`` in each plane) instead of
+        expanding the whole table."""
+        if self.packed:
+            rows = unpack_rows(self.data, ids, self.fmt)
+        else:
+            rows = self.data[ids]
+        return (rows.astype(jnp.float32) * self.scale[ids]).astype(dtype)
+
+    def pack(self) -> "QuantizedTensor":
+        """Bit-plane-packed copy (sub-byte formats only; no-op when packed)."""
+        if self.packed:
+            return self
+        return QuantizedTensor(pack_codes(self.data, self.fmt), self.scale,
+                               self.fmt, packed=True)
+
+    def unpack(self) -> "QuantizedTensor":
+        if not self.packed:
+            return self
+        return QuantizedTensor(self.codes, self.scale, self.fmt, packed=False)
+
+    # ---------------------------------------------------------------- pytree
     def tree_flatten(self):
-        return (self.codes, self.scale), (self.bits,)
+        return (self.data, self.scale), (self.fmt, self.packed)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], aux[0])
+        return cls(children[0], children[1], aux[0], aux[1])
 
 
-def _qmax(bits: int) -> int:
-    return INT5_MAX if bits == 5 else INT8_MAX
-
-
-def compute_scale(w: jnp.ndarray, bits: int, axis) -> jnp.ndarray:
+# ---------------------------------------------------------------------------
+# Float-weight quantization (per-channel symmetric) + QAT straight-through.
+# ---------------------------------------------------------------------------
+def compute_scale(w: jnp.ndarray, bits: FormatLike, axis) -> jnp.ndarray:
     """Symmetric per-channel scale: max|w| along ``axis`` maps to qmax."""
     amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
-    return jnp.maximum(amax, 1e-8) / _qmax(bits)
+    return jnp.maximum(amax, 1e-8) / get_format(bits).qmax
 
 
-def quantize_weights(w: jnp.ndarray, bits: int, axis=None) -> PsiQuantized:
+def quantize_weights(w: jnp.ndarray, bits: FormatLike, axis=None) -> QuantizedTensor:
     """Quantize float weights to PSI format.
 
     ``axis`` is the reduction axis/axes for the per-channel scale (None = per
     tensor).  The integer grid point is projected onto the PSI set, so the
     stored code is bit-identical to what the TMA hardware would compute with.
     """
-    if bits not in (5, 8):
-        raise ValueError(f"PSI supports INT5/INT8 weights, got {bits}")
-    scale = compute_scale(w, bits, axis)
-    q = jnp.clip(jnp.round(w / scale), -_qmax(bits) - 1, _qmax(bits)).astype(jnp.int32)
-    q = psi_project_int(q, bits)
-    return PsiQuantized(q.astype(jnp.int8), scale.astype(jnp.float32), bits)
+    fmt = get_format(bits)
+    scale = compute_scale(w, fmt, axis)
+    q = jnp.clip(jnp.round(w / scale), fmt.w_min, fmt.w_max).astype(jnp.int32)
+    q = psi_project_int(q, fmt)
+    return QuantizedTensor(q.astype(jnp.int8), scale.astype(jnp.float32), fmt)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
@@ -249,48 +431,95 @@ def quantize_activations_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]
 
 
 # ---------------------------------------------------------------------------
-# Sub-byte packing: INT5 codes as 5 bit-planes (exactly 5 bits/weight in HBM).
+# Sub-byte packing: INT<bits> codes as ``bits`` bit-planes (exactly bits/8
+# bytes per weight in HBM), for every sub-byte width in the registry.
 # ---------------------------------------------------------------------------
-def pack_int5(codes: jnp.ndarray) -> jnp.ndarray:
-    """Pack INT5 codes (..., K, N) -> uint8 bit-planes (..., 5, K//8, N).
+def pack_codes(codes: jnp.ndarray, fmt: FormatLike) -> jnp.ndarray:
+    """Pack INT<bits> codes (..., K, N) -> uint8 bit-planes (..., bits, K//8, N).
 
-    Bit ``b`` of weight ``codes[..., i*8 + j, n] + 16`` (offset-binary) is
-    stored at bit ``j`` of ``packed[..., b, i, n]``.  K must be divisible by 8.
-    Exactly 0.625 bytes per weight — the HBM footprint the psi_matmul kernel
-    reads.
+    Bit ``b`` of weight ``codes[..., i*8 + j, n] + 2^(bits-1)`` (offset-binary)
+    is stored at bit ``j`` of ``packed[..., b, i, n]``.  K must be divisible
+    by 8.  Exactly bits/8 bytes per weight — the HBM footprint the psi_matmul
+    kernel reads.
     """
+    fmt = get_format(fmt)
+    if not fmt.sub_byte:
+        raise ValueError(f"bit-plane packing is for sub-byte widths, "
+                         f"got {fmt.bits} bits")
     *lead, K, N = codes.shape
     if K % 8:
-        raise ValueError(f"K={K} must be divisible by 8 for int5 packing")
-    offs = (codes.astype(jnp.int32) + 16).astype(jnp.uint8)  # 0..31
+        raise ValueError(f"K={K} must be divisible by 8 for bit-plane packing")
+    offs = (codes.astype(jnp.int32) + fmt.offset).astype(jnp.uint8)
     offs = offs.reshape(*lead, K // 8, 8, N)
     lane = jnp.arange(8, dtype=jnp.uint8).reshape(8, 1)
     planes = []
-    for b in range(5):
+    for b in range(fmt.bits):
         bit = (offs >> b) & 1                      # (..., K//8, 8, N)
         plane = jnp.sum(bit.astype(jnp.uint32) << lane.astype(jnp.uint32), axis=-2)
-        planes.append(plane.astype(jnp.uint8))    # (..., K//8, N)
-    return jnp.stack(planes, axis=-3)              # (..., 5, K//8, N)
+        planes.append(plane.astype(jnp.uint8))     # (..., K//8, N)
+    return jnp.stack(planes, axis=-3)              # (..., bits, K//8, N)
 
 
-def unpack_int5(packed: jnp.ndarray) -> jnp.ndarray:
-    """Inverse of :func:`pack_int5`: (..., 5, K//8, N) uint8 -> (..., K, N) int8.
+def unpack_codes(packed: jnp.ndarray, fmt: FormatLike) -> jnp.ndarray:
+    """Inverse of :func:`pack_codes`: (..., bits, K//8, N) uint8 -> (..., K, N)
+    int8.
 
     The reconstruction is a literal sum-of-shifts (``bit << b``) — the software
     mirror of the SAM barrel shifters.
     """
-    *lead, five, Kb, N = packed.shape
-    assert five == 5
+    fmt = get_format(fmt)
+    *lead, nbits, Kb, N = packed.shape
+    assert nbits == fmt.bits, (packed.shape, fmt)
     lane = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
     val = jnp.zeros((*lead, Kb, 8, N), dtype=jnp.int32)
-    for b in range(5):
+    for b in range(fmt.bits):
         plane = packed[..., b, :, :][..., :, None, :]          # (..., K//8, 1, N)
         bit = (plane >> lane) & jnp.uint8(1)
         val = val + (bit.astype(jnp.int32) << b)
-    codes = val.reshape(*lead, Kb * 8, N) - 16
+    codes = val.reshape(*lead, Kb * 8, N) - fmt.offset
     return codes.astype(jnp.int8)
 
 
-def packed_bytes_per_weight(bits: int) -> float:
+def unpack_rows(packed: jnp.ndarray, rows: jnp.ndarray,
+                fmt: FormatLike) -> jnp.ndarray:
+    """Unpack only the selected logical rows of a packed (bits, V//8, D)
+    table: row ``i`` is bit ``i % 8`` of byte ``i // 8`` in each plane.
+    Returns int8 codes of shape ``rows.shape + (D,)`` — the gather-shaped
+    counterpart of :func:`unpack_codes` used by embedding lookups."""
+    fmt = get_format(fmt)
+    if packed.ndim != 3:
+        raise ValueError(
+            f"unpack_rows expects an unstacked (bits, V//8, D) table, got "
+            f"shape {packed.shape}; slice leading stack dims first")
+    rows = rows.astype(jnp.int32)
+    byte, bit = rows // 8, rows % 8
+    val = jnp.zeros(rows.shape + (packed.shape[-1],), jnp.int32)
+    for b in range(fmt.bits):
+        plane = packed[b][byte]                    # rows.shape + (D,)
+        val = val + (((plane.astype(jnp.int32) >> bit[..., None]) & 1) << b)
+    return (val - fmt.offset).astype(jnp.int8)
+
+
+def pack_int5(codes: jnp.ndarray) -> jnp.ndarray:
+    """INT5 instance of :func:`pack_codes` (0.625 bytes/weight)."""
+    return pack_codes(codes, 5)
+
+
+def unpack_int5(packed: jnp.ndarray) -> jnp.ndarray:
+    """INT5 instance of :func:`unpack_codes`."""
+    return unpack_codes(packed, 5)
+
+
+def packed_bytes_per_weight(bits: FormatLike) -> float:
     """HBM bytes per weight in serving format (the roofline 'memory' input)."""
-    return 0.625 if bits == 5 else 1.0
+    return get_format(bits).bytes_per_weight(packed=True)
+
+
+# ---------------------------------------------------------------------------
+# Default registry: every width the paper's "scalable integer weights less
+# than 1-byte" covers.  INT5/INT8 are the paper's Table-I points; the rest
+# open the sub-5-bit HBM-traffic frontier.
+# ---------------------------------------------------------------------------
+for _bits in sorted(DEFAULT_N_PSI):
+    register_format(_bits)
+del _bits

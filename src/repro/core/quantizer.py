@@ -1,16 +1,23 @@
 """Model-level PSI quantization: walk a parameter pytree and convert matmul
-weights into PSI serving format (codes + per-channel scale, optionally packed
-sub-byte planes for INT5).
+weights into PSI serving format (:class:`repro.core.psi.QuantizedTensor`
+leaves — integer codes + per-channel scale, optionally packed sub-byte
+bit-planes).
 
 This is the software analogue of the paper's flow (Fig. 6): weights live in
 DRAM/SRAM in compact integer form and the Weight-decomposition block expands
 them on the way into the compute array.  Here the "compute array" is the
 psi_matmul Pallas kernel which expands codes inside VMEM.
+
+Mixed precision is a first-class policy: ``quantize_param_tree(params,
+policy={"embed": 8, "w_down": 4, "default": 5})`` assigns a registered
+:class:`~repro.core.psi.PsiFormat` per terminal leaf name — the lever the
+memory-bound regime rewards (per-layer bytes/weight is the HBM-traffic dial).
 """
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional
+import warnings
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +46,90 @@ DEFAULT_EXCLUDE = (
     r"router",       # tiny; quantizing it flips top-k routing
 )
 
-QUANT_MODES = ("none", "qat5", "qat8", "psi5", "psi8")
+# A policy maps terminal leaf names (regex alternatives, matched like the
+# include-list) to registered bit-widths; "default" covers the rest.  A bits
+# value of 0/None leaves those weights in float.
+Policy = Mapping[str, Optional[int]]
+
+
+def parse_quant_mode(mode: str) -> Tuple[Optional[str], Optional[int]]:
+    """"none" -> (None, None); "qatN" -> ("qat", N); "psiN" -> ("psi", N).
+    N must name a registered :class:`~repro.core.psi.PsiFormat`."""
+    if mode in ("", "none", None):
+        return None, None
+    m = re.fullmatch(r"(qat|psi)(\d+)", mode)
+    if not m:
+        raise ValueError(f"unknown quant mode {mode!r} "
+                         f"(expected none / qatN / psiN)")
+    kind, bits = m.group(1), int(m.group(2))
+    psi.get_format(bits)      # raises on unregistered widths
+    return kind, bits
+
+
+def quant_mode_choices() -> Tuple[str, ...]:
+    """Valid quant-mode strings, derived from the format registry (the
+    replacement for the old hard-coded QUANT_MODES tuple)."""
+    bits = psi.registered_bits()
+    return (("none",) + tuple(f"qat{b}" for b in bits)
+            + tuple(f"psi{b}" for b in bits))
+
+
+def serving_mode_choices() -> Tuple[str, ...]:
+    """Registry-derived serving-format choices for the serve/dryrun CLIs
+    (QAT modes are a training concern and are excluded)."""
+    return ("none",) + tuple(f"psi{b}" for b in psi.registered_bits())
+
+
+def parse_policy(spec: Union[str, Policy, None]) -> Optional[Dict[str, Optional[int]]]:
+    """Normalize a mixed-precision policy.
+
+    Accepts a mapping ({"embed": 8, "default": 5}) or the CLI string form
+    "embed=8,w_down=4,default=5".  Every bits value must name a registered
+    format (0 means "keep float").
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, str):
+        out: Dict[str, Optional[int]] = {}
+        for item in spec.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            name, _, val = item.partition("=")
+            if not _:
+                raise ValueError(f"policy entry {item!r} is not name=bits")
+            out[name.strip()] = int(val)
+    else:
+        out = dict(spec)
+    for name, bits in out.items():
+        if bits:
+            psi.get_format(bits)
+        if name == "default":
+            continue
+        try:
+            re.compile(rf"(^|/)(?:{name})$")
+        except re.error as e:
+            # fail at the flag, not with a raw re.error deep inside tree_map
+            raise ValueError(
+                f"policy name {name!r} is not a valid leaf-name pattern "
+                f"({e})") from None
+    return out
+
+
+def _policy_bits(path: str, policy: Optional[Dict[str, Optional[int]]],
+                 default: Optional[int]) -> Optional[int]:
+    """Resolve the bit-width for one leaf: first policy entry whose name
+    matches the leaf's terminal path component wins, then the policy's
+    "default", then the uniform ``default`` bits."""
+    if policy:
+        for name, bits in policy.items():
+            if name == "default":
+                continue
+            if re.search(rf"(^|/)(?:{name})$", path):
+                return bits
+        if "default" in policy:
+            return policy["default"]
+    return default
 
 
 def _path_str(path) -> str:
@@ -71,40 +161,83 @@ def _scale_axis(path: str, leaf) -> tuple:
 
 def quantize_param_tree(
     params: Dict,
-    bits: int,
+    bits: Optional[int] = None,
     pack: bool = False,
     exclude: Optional[tuple] = None,
+    policy: Union[str, Policy, None] = None,
 ) -> Dict:
-    """Return a new tree where quantizable leaves become serving-format dicts.
+    """Return a new tree where quantizable leaves become
+    :class:`~repro.core.psi.QuantizedTensor` serving leaves.
 
-    * ``{"codes": int8, "scale": f32}``             (bits=8, or bits=5 unpacked)
-    * ``{"planes": uint8 (...,5,K//8,N), "scale"}``  (bits=5, pack=True)
+    * ``bits`` — uniform width for every quantizable leaf;
+    * ``policy`` — per-layer mixed precision, e.g. ``{"embed": 8,
+      "w_down": 4, "default": 5}`` (overrides ``bits`` where it matches);
+    * ``pack=True`` — sub-byte leaves additionally bit-plane pack
+      (``fmt.bits/8`` bytes per weight in HBM) when the contraction dim is a
+      multiple of 8; embeddings stay unpacked (row-gather path).
 
     Non-quantizable leaves pass through unchanged.
     """
     exclude = DEFAULT_EXCLUDE if exclude is None else exclude
+    policy = parse_policy(policy)
+    if bits is None and not policy:
+        raise ValueError("pass uniform bits= and/or a mixed-precision policy=")
+    paths, qpaths = [], []
 
     def convert(path, leaf):
         p = _path_str(path)
+        paths.append(p)
         if not is_quantizable(p, leaf):
             return leaf
-        q = psi.quantize_weights(leaf, bits, axis=_scale_axis(p, leaf))
-        if (pack and bits == 5 and leaf.ndim >= 2
+        qpaths.append(p)
+        leaf_bits = _policy_bits(p, policy, bits)
+        if not leaf_bits:
+            return leaf
+        q = psi.quantize_weights(leaf, leaf_bits, axis=_scale_axis(p, leaf))
+        if (pack and q.fmt.sub_byte and leaf.ndim >= 2
                 and leaf.shape[-2] % 8 == 0 and not re.search(r"embed", p)):
-            return {"planes": psi.pack_int5(q.codes), "scale": q.scale}
-        return {"codes": q.codes, "scale": q.scale}
+            return q.pack()
+        return q
 
-    return jax.tree_util.tree_map_with_path(convert, params)
+    out = jax.tree_util.tree_map_with_path(convert, params)
+    if policy:
+        # A policy entry that silently has no effect is exactly the failure
+        # mixed precision exists to avoid.  Two loud cases: a key matching
+        # no leaf at all (typo), and a *nonzero*-bits key matching only
+        # excluded/non-quantizable leaves (contradicted intent — e.g.
+        # router=8 when the router is on the exclude list).  A deliberate
+        # {"router": 0} keep-float entry stays quiet.
+        def hit(key, pool):
+            return any(re.search(rf"(^|/)(?:{key})$", p) for p in pool)
+
+        dead = [k for k in policy if k != "default" and not hit(k, paths)]
+        ineffective = [k for k in policy
+                       if k != "default" and policy[k] and k not in dead
+                       and not hit(k, qpaths)]
+        if dead:
+            warnings.warn(
+                f"quantization policy entries matched no parameter leaf: "
+                f"{sorted(dead)} (known weight names: {WEIGHT_NAMES})",
+                stacklevel=2)
+        if ineffective:
+            warnings.warn(
+                f"quantization policy entries match only excluded/"
+                f"non-quantizable leaves and have no effect: "
+                f"{sorted(ineffective)} (see DEFAULT_EXCLUDE)", stacklevel=2)
+    return out
 
 
-def dequantize_leaf(leaf: Any, dtype=jnp.bfloat16):
-    """Expand one serving-format leaf back to a dense float array."""
-    if isinstance(leaf, dict) and "planes" in leaf:
-        codes = psi.unpack_int5(leaf["planes"])
-        return (codes.astype(jnp.float32) * leaf["scale"]).astype(dtype)
-    if isinstance(leaf, dict) and "codes" in leaf:
-        return (leaf["codes"].astype(jnp.float32) * leaf["scale"]).astype(dtype)
+def dequantize(leaf: Any, dtype=jnp.bfloat16):
+    """THE shared dequantize helper: expand one serving-format leaf back to a
+    dense float array; non-quantized leaves pass through.  Every inline
+    scale-application in the model zoo routes here (DESIGN.md §2)."""
+    if isinstance(leaf, psi.QuantizedTensor):
+        return leaf.dequantize(dtype)
     return leaf
+
+
+# Backwards-compatible name (pre-QuantizedTensor API).
+dequantize_leaf = dequantize
 
 
 def fake_quant_param_tree(params: Dict, bits: int, exclude: Optional[tuple] = None) -> Dict:
@@ -124,7 +257,9 @@ def fake_quant_param_tree(params: Dict, bits: int, exclude: Optional[tuple] = No
 
 
 def quantized_bytes(params: Dict) -> int:
-    """Total serving-format bytes (for EXPERIMENTS.md compression reporting)."""
+    """Total serving-format bytes (for EXPERIMENTS.md compression reporting).
+    QuantizedTensor leaves flatten to their storage (codes or packed planes)
+    plus scales, so packed sub-byte formats report their true footprint."""
     total = 0
     for leaf in jax.tree_util.tree_leaves(params):
         total += leaf.size * leaf.dtype.itemsize

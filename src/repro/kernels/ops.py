@@ -1,6 +1,9 @@
 """Jit'd dispatch wrappers around the Pallas kernels.
 
-Backend routing is explicit (no silent fall-through):
+The serving weight arrives as a :class:`~repro.core.psi.QuantizedTensor`;
+dispatch is typed — storage layout (``qt.packed``) picks the kernel body and
+``qt.fmt.bits`` parameterizes it — with explicit backend routing (no silent
+fall-through):
 
   * ``tpu``          -> the Pallas kernel (compressed weights in HBM,
                         VMEM dequantization);
@@ -28,6 +31,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import psi
 from repro.kernels import psi_matmul as _pk
 from repro.kernels import ref as _ref
 
@@ -50,32 +54,34 @@ def _force_interpret() -> bool:
     return os.environ.get("REPRO_FORCE_INTERPRET", "0") == "1"
 
 
-def psi_matmul_2d(x2d: jnp.ndarray, wleaf: dict) -> jnp.ndarray:
-    """(M, K) x serving-format weight dict -> (M, N)."""
-    scale = wleaf["scale"].reshape(-1)
+def psi_matmul_2d(x2d: jnp.ndarray, qt: psi.QuantizedTensor) -> jnp.ndarray:
+    """(M, K) x QuantizedTensor weight -> (M, N)."""
+    scale = qt.scale.reshape(-1)
     bm = _pk.pick_bm(x2d.shape[0], x2d.dtype)
-    if "planes" in wleaf:
+    if qt.packed:
+        bits = qt.fmt.bits
         if _use_pallas():
-            return _pk.psi_matmul_int5(x2d, wleaf["planes"], scale, bm=bm)
+            return _pk.psi_matmul_packed(x2d, qt.data, scale, bits=bits,
+                                         bm=bm)
         if _use_gpu_fast_path():
-            return _ref.psi_matmul_int5_dequant(x2d, wleaf["planes"], scale)
+            return _ref.psi_matmul_packed_dequant(x2d, qt.data, scale, bits)
         if _force_interpret():
-            return _pk.psi_matmul_int5(x2d, wleaf["planes"], scale, bm=bm,
-                                       interpret=True)
-        return _ref.psi_matmul_int5_ref(x2d, wleaf["planes"], scale)
+            return _pk.psi_matmul_packed(x2d, qt.data, scale, bits=bits,
+                                         bm=bm, interpret=True)
+        return _ref.psi_matmul_packed_ref(x2d, qt.data, scale, bits)
     if _use_pallas():
-        return _pk.psi_matmul_int8(x2d, wleaf["codes"], scale, bm=bm)
+        return _pk.psi_matmul_codes(x2d, qt.data, scale, bm=bm)
     if _use_gpu_fast_path():
-        return _ref.psi_matmul_int8_dequant(x2d, wleaf["codes"], scale)
+        return _ref.psi_matmul_codes_dequant(x2d, qt.data, scale)
     if _force_interpret():
-        return _pk.psi_matmul_int8(x2d, wleaf["codes"], scale, bm=bm,
-                                   interpret=True)
-    return _ref.psi_matmul_int8_ref(x2d, wleaf["codes"], scale)
+        return _pk.psi_matmul_codes(x2d, qt.data, scale, bm=bm,
+                                    interpret=True)
+    return _ref.psi_matmul_codes_ref(x2d, qt.data, scale)
 
 
-def psi_matmul(x: jnp.ndarray, wleaf: dict) -> jnp.ndarray:
-    """(..., K) x serving-format weight -> (..., N); flattens leading dims."""
+def psi_matmul(x: jnp.ndarray, qt: psi.QuantizedTensor) -> jnp.ndarray:
+    """(..., K) x QuantizedTensor weight -> (..., N); flattens leading dims."""
     lead = x.shape[:-1]
     K = x.shape[-1]
-    y = psi_matmul_2d(x.reshape(-1, K), wleaf)
+    y = psi_matmul_2d(x.reshape(-1, K), qt)
     return y.reshape(*lead, y.shape[-1])

@@ -11,10 +11,13 @@ Layout / tiling:
   * Grid (M/bm, N/bn, K/bk); K is the innermost ("arbitrary") dimension and
     accumulates into a VMEM f32 scratch; the per-output-channel scale is
     applied once in the epilogue (k == K/bk - 1).
-  * INT8: codes tile (bk, bn) int8 -> bf16 convert -> MXU dot.
-  * INT5: bit-plane tile (5, bk//8, bn) uint8; the kernel rebuilds the
-    offset-binary value with five shift-adds (the SAM barrel-shifter mirror),
-    subtracts 16, converts, dots.
+  * int8 codes: tile (bk, bn) int8 -> bf16 convert -> MXU dot (any registered
+    width's codes — the storage is one byte regardless of PsiFormat.bits).
+  * packed sub-byte: bit-plane tile (bits, bk//8, bn) uint8; the kernel
+    rebuilds the offset-binary value with ``bits`` shift-adds (the SAM
+    barrel-shifter mirror), subtracts 2^(bits-1), converts, dots.  One kernel
+    body serves every sub-byte width in the PsiFormat registry — ``bits`` is
+    a static argument baked per format at trace time.
   * bm/bn/bk default 128/128/128 — MXU-aligned (multiples of 128 on the
     matmul dims), VMEM footprint per step ~ bm*bk*2 + bk*bn + bm*bn*4
     ≈ 128 KiB, far under the ~16 MiB/core budget, leaving room for
@@ -90,7 +93,8 @@ def _int8_kernel(x_ref, codes_ref, scale_ref, o_ref, acc_ref, *, k_steps):
         o_ref[...] = (acc_ref[...] * scale_ref[...]).astype(o_ref.dtype)
 
 
-def _int5_kernel(x_ref, planes_ref, scale_ref, o_ref, acc_ref, *, k_steps):
+def _packed_kernel(x_ref, planes_ref, scale_ref, o_ref, acc_ref, *, k_steps,
+                   bits):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -98,17 +102,18 @@ def _int5_kernel(x_ref, planes_ref, scale_ref, o_ref, acc_ref, *, k_steps):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]                                   # (bm, bk)
-    planes = planes_ref[...]                         # (5, bk//8, bn) uint8
-    five, kb, bn = planes.shape
-    # SAM-mirror reconstruction: five shift-adds rebuild the offset-binary
+    planes = planes_ref[...]                         # (bits, bk//8, bn) uint8
+    _, kb, bn = planes.shape
+    # SAM-mirror reconstruction: ``bits`` shift-adds rebuild the offset-binary
     # weight; lane index selects the bit within each packed byte.
     lane = jax.lax.broadcasted_iota(jnp.int32, (kb, 8, bn), 1)
     val = jnp.zeros((kb, 8, bn), jnp.int32)
-    for b in range(5):
+    for b in range(bits):
         plane = planes[b].astype(jnp.int32)[:, None, :]   # (kb, 1, bn)
         bit = (plane >> lane) & 1
         val = val + (bit << b)
-    w = (val.reshape(kb * 8, bn) - 16).astype(x.dtype)    # (bk, bn)
+    offset = 1 << (bits - 1)
+    w = (val.reshape(kb * 8, bn) - offset).astype(x.dtype)  # (bk, bn)
     acc_ref[...] += jax.lax.dot_general(
         x, w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
@@ -130,7 +135,11 @@ def _pad_to(a, mult, axis):
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def psi_matmul_int8(x, codes, scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
                     bk=DEFAULT_BK, interpret=False):
-    """x (M, K) @ dequant(codes (K, N) int8, scale (N,)) -> (M, N)."""
+    """x (M, K) @ dequant(codes (K, N) int8, scale (N,)) -> (M, N).
+
+    Serves every *unpacked* PsiFormat — sub-byte codes are stored int8, so
+    the kernel body is width-independent (``psi_matmul_codes`` is the
+    format-neutral alias ``repro.kernels.ops`` dispatches through)."""
     M, K = x.shape
     Kc, N = codes.shape
     assert K == Kc
@@ -159,29 +168,38 @@ def psi_matmul_int8(x, codes, scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
     return out[:M, :N]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def psi_matmul_int5(x, planes, scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
-                    bk=DEFAULT_BK, interpret=False):
-    """x (M, K) @ dequant(planes (5, K//8, N) uint8, scale (N,)) -> (M, N)."""
+# Format-neutral alias: any registered width's unpacked codes are int8.
+psi_matmul_codes = psi_matmul_int8
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "bm", "bn", "bk", "interpret"))
+def psi_matmul_packed(x, planes, scale, *, bits, bm=DEFAULT_BM,
+                      bn=DEFAULT_BN, bk=DEFAULT_BK, interpret=False):
+    """x (M, K) @ dequant(planes (bits, K//8, N) uint8, scale (N,)) -> (M, N).
+
+    ``bits`` is the PsiFormat width (static) — the same kernel body serves
+    every registered sub-byte format.
+    """
     assert bk % 8 == 0
     M, K = x.shape
-    five, Kb, N = planes.shape
-    assert five == 5 and Kb * 8 == K, (planes.shape, x.shape)
+    nb, Kb, N = planes.shape
+    assert nb == bits and Kb * 8 == K, (planes.shape, x.shape, bits)
     xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
     pp = _pad_to(_pad_to(planes, bk // 8, 1), bn, 2)
-    # padded plane bytes are 0 -> unpack to -16; cancelled because x is
-    # zero-padded on K, so the extra columns multiply zeros.  Pad x K first.
+    # padded plane bytes are 0 -> unpack to -2^(bits-1); cancelled because x
+    # is zero-padded on K, so the extra columns multiply zeros.  Pad x K first.
     sp = _pad_to(scale.reshape(1, -1), bn, 1)
     Mp, Kp = xp.shape
     Np = pp.shape[2]
     k_steps = Kp // bk
     grid = (Mp // bm, Np // bn, k_steps)
     out = pl.pallas_call(
-        functools.partial(_int5_kernel, k_steps=k_steps),
+        functools.partial(_packed_kernel, k_steps=k_steps, bits=bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
-            pl.BlockSpec((5, bk // 8, bn), lambda m, n, k: (0, k, n)),
+            pl.BlockSpec((bits, bk // 8, bn), lambda m, n, k: (0, k, n)),
             pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
@@ -192,3 +210,9 @@ def psi_matmul_int5(x, planes, scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
         interpret=interpret,
     )(xp, pp, sp)
     return out[:M, :N]
+
+
+def psi_matmul_int5(x, planes, scale, **kw):
+    """INT5 instance of :func:`psi_matmul_packed` (kept as the named entry
+    point for the paper's Table-I width)."""
+    return psi_matmul_packed(x, planes, scale, bits=5, **kw)

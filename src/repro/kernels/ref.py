@@ -2,7 +2,9 @@
 
 These define the exact semantics the kernels must match (asserted in
 tests/test_kernels.py across shape/dtype sweeps) and serve as the CPU
-execution path of ``repro.kernels.ops``.
+execution path of ``repro.kernels.ops``.  Every oracle is parameterized by
+the weight's :class:`~repro.core.psi.PsiFormat` width — one code path per
+storage layout (int8 codes vs bit-planes), not per format.
 """
 from __future__ import annotations
 
@@ -11,12 +13,13 @@ import jax.numpy as jnp
 from repro.core import psi
 
 
-def psi_matmul_int8_ref(x: jnp.ndarray, codes: jnp.ndarray,
-                        scale: jnp.ndarray) -> jnp.ndarray:
+def psi_matmul_codes_ref(x: jnp.ndarray, codes: jnp.ndarray,
+                         scale: jnp.ndarray) -> jnp.ndarray:
     """x (..., K) @ dequant(codes (K, N), scale (1, N) or (N,)) -> (..., N).
 
     Accumulates in f32 (MXU-accurate), applies the per-output-channel scale
-    after the reduction — bit-matching the kernel's epilogue.
+    after the reduction — bit-matching the kernel's epilogue.  Width-neutral:
+    any registered format's unpacked codes are int8.
     """
     acc = jnp.einsum("...k,kn->...n", x.astype(jnp.float32),
                      codes.astype(jnp.float32),
@@ -24,15 +27,26 @@ def psi_matmul_int8_ref(x: jnp.ndarray, codes: jnp.ndarray,
     return (acc * scale.reshape(1, -1)).astype(x.dtype)
 
 
+def psi_matmul_packed_ref(x: jnp.ndarray, planes: jnp.ndarray,
+                          scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """x (..., K) @ dequant(planes (bits, K//8, N), scale) -> (..., N).
+
+    The bit-plane unpack (sum of shifted bits − 2^(bits-1)) is the software
+    mirror of the SAM barrel-shift reconstruction (paper Fig. 2 /
+    DESIGN.md §2).
+    """
+    codes = psi.unpack_codes(planes, bits)
+    return psi_matmul_codes_ref(x, codes, scale)
+
+
+# Named instances of the paper's Table-I widths (kept as the test-facing
+# entry points).
+psi_matmul_int8_ref = psi_matmul_codes_ref
+
+
 def psi_matmul_int5_ref(x: jnp.ndarray, planes: jnp.ndarray,
                         scale: jnp.ndarray) -> jnp.ndarray:
-    """x (..., K) @ dequant(planes (5, K//8, N), scale) -> (..., N).
-
-    The bit-plane unpack (sum of shifted bits − 16) is the software mirror of
-    the SAM barrel-shift reconstruction (paper Fig. 2 / DESIGN.md §2).
-    """
-    codes = psi.unpack_int5(planes)
-    return psi_matmul_int8_ref(x, codes, scale)
+    return psi_matmul_packed_ref(x, planes, scale, 5)
 
 
 # ---------------------------------------------------------------------------
@@ -45,14 +59,22 @@ def psi_matmul_int5_ref(x: jnp.ndarray, planes: jnp.ndarray,
 # eligible, f32 accumulation) — mathematically identical to the oracle's
 # scale-in-the-epilogue because the scale only varies along the output dim.
 # ---------------------------------------------------------------------------
-def psi_matmul_int8_dequant(x: jnp.ndarray, codes: jnp.ndarray,
-                            scale: jnp.ndarray) -> jnp.ndarray:
+def psi_matmul_codes_dequant(x: jnp.ndarray, codes: jnp.ndarray,
+                             scale: jnp.ndarray) -> jnp.ndarray:
     w = (codes.astype(jnp.float32) * scale.reshape(1, -1)).astype(x.dtype)
     y = jnp.einsum("...k,kn->...n", x, w,
                    preferred_element_type=jnp.float32)
     return y.astype(x.dtype)
 
 
+def psi_matmul_packed_dequant(x: jnp.ndarray, planes: jnp.ndarray,
+                              scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    return psi_matmul_codes_dequant(x, psi.unpack_codes(planes, bits), scale)
+
+
+psi_matmul_int8_dequant = psi_matmul_codes_dequant
+
+
 def psi_matmul_int5_dequant(x: jnp.ndarray, planes: jnp.ndarray,
                             scale: jnp.ndarray) -> jnp.ndarray:
-    return psi_matmul_int8_dequant(x, psi.unpack_int5(planes), scale)
+    return psi_matmul_packed_dequant(x, planes, scale, 5)

@@ -59,10 +59,10 @@ def abstract_params(model, quant: str):
     params = jax.tree_util.tree_map(
         lambda s: _sds(s.shape, dt if jnp.issubdtype(s.dtype, jnp.floating)
                        else s.dtype), params)
-    if quant in ("psi8", "psi5"):
-        bits = 8 if quant == "psi8" else 5
+    if quant != "none":
+        _, bits = qz.parse_quant_mode(quant)
         params = jax.eval_shape(
-            lambda p: qz.quantize_param_tree(p, bits, pack=(bits == 5)), params)
+            lambda p: qz.quantize_param_tree(p, bits, pack=True), params)
     return params
 
 
@@ -319,7 +319,7 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--quant", default="psi8",
-                    choices=["none", "psi5", "psi8"])
+                    choices=list(qz.serving_mode_choices()))
     ap.add_argument("--kv-quant", default="", choices=["", "int8"])
     ap.add_argument("--out", default=None, help="JSON output path")
     args = ap.parse_args()

@@ -38,6 +38,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
+from repro.core.quantizer import (parse_policy, parse_quant_mode,
+                                  serving_mode_choices)
 from repro.launch.mesh import make_mesh
 from repro.launch.scheduler import (Request, Scheduler, poisson_trace,
                                     summarize)
@@ -284,10 +286,19 @@ def build_server(args) -> Tuple[Server, object]:
         cfg = reduced_config(cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    if args.quant != "none":
-        bits = int(args.quant[-1])
-        params = model.quantize(params, bits, pack=(bits == 5))
-        cfg = dataclasses.replace(cfg, quant_mode=args.quant)
+    policy = parse_policy(getattr(args, "quant_policy", None))
+    if args.quant != "none" or policy:
+        _, bits = parse_quant_mode(args.quant)
+        # pack=True only bit-plane-packs sub-byte leaves, so uniform psi8
+        # stays plain int8 codes while psi5/psi4/... leaves shrink to
+        # fmt.bits/8 bytes per weight.
+        params = model.quantize(params, bits, pack=True, policy=policy)
+        # quant_mode drives the float-leaf (QAT) path only; for serving it
+        # records the uniform format (or the policy default) for logging.
+        mode = args.quant
+        if mode == "none" and policy and policy.get("default"):
+            mode = f"psi{policy['default']}"
+        cfg = dataclasses.replace(cfg, quant_mode=mode)
     # Cache extent must cover the *bucketed* prefill plus the decode budget,
     # or the ring layout would silently drop the prompt head.
     longest = args.prompt_len + args.prompt_jitter
@@ -313,7 +324,15 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant", default="psi8",
-                    choices=["none", "psi5", "psi8"])
+                    choices=list(serving_mode_choices()),
+                    help="uniform PSI serving width (any registered "
+                         "PsiFormat; sub-byte widths bit-plane pack)")
+    ap.add_argument("--quant-policy", default=None,
+                    help='per-layer mixed precision, e.g. '
+                         '"embed=8,w_down=4,default=5" — names match '
+                         'terminal weight leaves, "default" covers the '
+                         'rest, 0 keeps a leaf in float.  Overrides '
+                         '--quant where it matches.')
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=4,
                     help="decode slots (the fixed decode batch dimension)")

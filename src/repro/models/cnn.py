@@ -82,11 +82,13 @@ def init_cnn(cfg: CNNConfig, key) -> dict:
 
 
 def _maybe_q(w, quant_mode, conv=False):
-    if isinstance(w, dict):
-        return quantizer.dequantize_leaf(w, jnp.float32)
-    bits = {"qat5": 5, "qat8": 8, "psi5": 5, "psi8": 8}.get(quant_mode)
-    if bits is None:
+    if isinstance(w, psi.QuantizedTensor):
+        # serving leaf: expand through the one shared dequantize helper
+        return quantizer.dequantize(w, jnp.float32)
+    kind, bits = quantizer.parse_quant_mode(quant_mode)
+    if kind is None:
         return w
+    # float leaf + qatN/psiN mode: compute with PSI-projected weights (STE)
     axis = tuple(range(w.ndim - 1)) if conv else (w.ndim - 2,)
     return psi.fake_quant_ste(w, bits, axis)
 
@@ -126,5 +128,5 @@ def cnn_loss(params, batch, cfg: CNNConfig):
     return loss, {"acc": acc}
 
 
-def quantize_cnn(params: dict, bits: int) -> dict:
-    return quantizer.quantize_param_tree(params, bits)
+def quantize_cnn(params: dict, bits: int = None, policy=None) -> dict:
+    return quantizer.quantize_param_tree(params, bits, policy=policy)

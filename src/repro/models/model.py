@@ -51,8 +51,12 @@ class Model:
             params["enc_norm_f"] = layers.init_norm(cfg, cfg.d_model)
         return params
 
-    def quantize(self, params, bits: int, pack: bool = False) -> dict:
-        return quantizer.quantize_param_tree(params, bits, pack=pack)
+    def quantize(self, params, bits: int = None, pack: bool = False,
+                 policy=None) -> dict:
+        """PSI serving format: uniform ``bits`` and/or a per-layer mixed-
+        precision ``policy`` ({"embed": 8, "w_down": 4, "default": 5})."""
+        return quantizer.quantize_param_tree(params, bits, pack=pack,
+                                             policy=policy)
 
     # -------------------------------------------------------------- embedding
     def _embed_tokens(self, params, tokens, batch):

@@ -29,6 +29,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core import psi
+from repro.core.quantizer import dequantize
 from repro.quant.linear import _maybe_fake_quant
 
 
@@ -46,9 +48,11 @@ def init_moe(cfg, key):
 
 def _expert_weights(p, name, cfg):
     leaf = p[name]
-    if isinstance(leaf, dict):  # PSI serving format: dequantize expert block
-        from repro.core.quantizer import dequantize_leaf
-        return dequantize_leaf(leaf)
+    if isinstance(leaf, psi.QuantizedTensor):
+        # PSI serving format: expand the expert block through the one shared
+        # dequantize helper (the batched becd,edf expert einsum has no
+        # 2-D-weight kernel path).
+        return dequantize(leaf)
     return _maybe_fake_quant(leaf, cfg.quant_mode, axis=(leaf.ndim - 2,))
 
 
@@ -71,10 +75,8 @@ def moe_ffn(p, x, cfg, capacity_override=None):
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
 
-    router_w = p["router"]
-    if isinstance(router_w, dict):
-        from repro.core.quantizer import dequantize_leaf
-        router_w = dequantize_leaf(router_w, jnp.float32)
+    # router is float by default policy; dequantize is a pass-through then
+    router_w = dequantize(p["router"], jnp.float32)
     logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router_w)
     probs = jax.nn.softmax(logits, axis=-1)                     # (B, S, E)
     gate, eidx = jax.lax.top_k(probs, k)                        # (B, S, k)

@@ -25,6 +25,20 @@ PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
+def _weight_bytes(quant: str) -> float:
+    """Serving bytes/param for a quant mode: bf16 for "none", else the
+    registered PsiFormat's packed footprint (psi8 1 B, psi5 0.625 B,
+    psi4 0.5 B, ...)."""
+    if quant in ("", "none", None):
+        return 2.0
+    from repro.core.psi import get_format
+    try:
+        return get_format(quant).bytes_per_weight(packed=True)
+    except ValueError:
+        return 2.0
+
+
+# Back-compat view of the paper's three named points (tests/docs reference).
 WEIGHT_BYTES = {"none": 2.0, "psi8": 1.0, "psi5": 0.625}
 ACT_B = 2            # bf16 activations
 TRAIN_GEMM_FACTOR = 4.0    # fwd + remat-fwd + 2x bwd
@@ -147,11 +161,11 @@ def weight_bytes_total(cfg, quant: str) -> float:
     """Serving-format parameter bytes (quant applies to GEMM weights only;
     norms/scales stay f32 — a ~0.1 % correction, ignored)."""
     n = cfg.param_count()
-    return n * WEIGHT_BYTES.get(quant, 2.0)
+    return n * _weight_bytes(quant)
 
 
 def active_weight_bytes(cfg, quant: str) -> float:
-    return cfg.active_param_count() * WEIGHT_BYTES.get(quant, 2.0)
+    return cfg.active_param_count() * _weight_bytes(quant)
 
 
 def kv_cache_bytes(cfg, B, S, kv_quant: str = "") -> float:

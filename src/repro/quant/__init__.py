@@ -1,1 +1,5 @@
 from repro.quant.linear import linear, embed, tied_logits  # noqa: F401
+# Re-exported typed quantization API (the first-class serving-format surface).
+from repro.core.psi import PsiFormat, QuantizedTensor, get_format  # noqa: F401
+from repro.core.quantizer import (dequantize, parse_policy,  # noqa: F401
+                                  parse_quant_mode, quantize_param_tree)

@@ -4,35 +4,35 @@ Three code paths, selected by the weight leaf's *type* and the config's
 ``quant_mode``:
 
 * plain float leaf, mode "none"            -> bf16 einsum (MXU, f32 accum)
-* plain float leaf, mode "qat5"/"qat8"     -> fake-quant STE then einsum
+* plain float leaf, mode "qatN"            -> fake-quant STE then einsum
   (the paper's "trained with the proposed quantization")
-* serving dict leaf ({"codes"|"planes", "scale"}) -> PSI kernel
-  (``repro.kernels.ops``: Pallas on TPU, oracle on CPU)
+* ``QuantizedTensor`` leaf                 -> PSI kernel, dispatched on the
+  leaf's ``PsiFormat`` + storage layout (``repro.kernels.ops``: Pallas on
+  TPU, oracle on CPU)
 
 Keeping one entry point means every architecture in the zoo gets the paper's
-technique for free, and the dry-run's HBM byte counts reflect the compressed
-weight format.
+technique for free — including per-layer mixed precision, because each leaf
+carries its own format — and the dry-run's HBM byte counts reflect the
+compressed weight format.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import psi
+from repro.core import psi, quantizer
 from repro.kernels import ops
-
-_QAT_BITS = {"qat5": 5, "qat8": 8}
 
 
 def _maybe_fake_quant(w: jnp.ndarray, quant_mode: str, axis) -> jnp.ndarray:
-    bits = _QAT_BITS.get(quant_mode)
-    if bits is None:
+    kind, bits = quantizer.parse_quant_mode(quant_mode)
+    if kind != "qat":
         return w
     return psi.fake_quant_ste(w, bits, axis)
 
 
 def linear(wleaf, x: jnp.ndarray, quant_mode: str = "none") -> jnp.ndarray:
     """x (..., K) @ w (K, N) -> (..., N)."""
-    if isinstance(wleaf, dict):                      # PSI serving format
+    if isinstance(wleaf, psi.QuantizedTensor):    # PSI serving format
         return ops.psi_matmul(x, wleaf)
     w = _maybe_fake_quant(wleaf, quant_mode, axis=(wleaf.ndim - 2,))
     y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype),
@@ -41,20 +41,23 @@ def linear(wleaf, x: jnp.ndarray, quant_mode: str = "none") -> jnp.ndarray:
 
 
 def embed(wleaf, ids: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
-    """Embedding lookup; PSI tables dequantize per gathered row."""
-    if isinstance(wleaf, dict):
-        codes = wleaf["codes"]                       # (V, D) int8
-        rows = codes[ids].astype(jnp.float32) * wleaf["scale"][ids]
-        return rows.astype(dtype)
+    """Embedding lookup; PSI tables dequantize per gathered row.
+
+    Packed (bit-plane) tables unpack only the gathered rows — the shared
+    ``QuantizedTensor.gather_rows`` path — so a ``--pack`` embedding leaf
+    serves instead of raising on a missing "codes" key.
+    """
+    if isinstance(wleaf, psi.QuantizedTensor):
+        return wleaf.gather_rows(ids, dtype)
     return wleaf[ids].astype(dtype)
 
 
 def tied_logits(wleaf, x: jnp.ndarray, quant_mode: str = "none") -> jnp.ndarray:
     """logits = x @ embed_table.T with per-row (= per-vocab-output) scales."""
-    if isinstance(wleaf, dict):
-        codes_t = wleaf["codes"].T                   # (D, V)
-        return ops.psi_matmul(x, {"codes": codes_t,
-                                  "scale": wleaf["scale"].reshape(-1)})
+    if isinstance(wleaf, psi.QuantizedTensor):
+        codes_t = wleaf.codes.T                   # (D, V); unpacks if packed
+        return ops.psi_matmul(x, psi.QuantizedTensor(
+            codes_t, wleaf.scale.reshape(-1), wleaf.fmt))
     w = _maybe_fake_quant(wleaf, quant_mode, axis=(wleaf.ndim - 1,))
     y = jnp.einsum("...d,vd->...v", x, w.astype(x.dtype),
                    preferred_element_type=jnp.float32)

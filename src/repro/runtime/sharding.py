@@ -11,7 +11,9 @@ on grad), optimizer moments inherit the param spec.
 
 Rules are *logical*: a rule names the spec of the trailing (weight) dims;
 leading layer-stack dims are automatically None.  Quantized serving leaves
-(codes/planes/scale dicts) derive their spec from the same logical rule.
+(``QuantizedTensor``: codes-or-planes + scale, format as static metadata)
+derive their spec from the same logical rule — dispatch is typed, never
+dict-key sniffing.
 """
 from __future__ import annotations
 
@@ -21,6 +23,8 @@ from typing import Optional, Tuple
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.psi import QuantizedTensor
 
 FSDP_AXIS = "data"
 DP_AXES = ("pod", "data")        # outer batch axes when present
@@ -185,27 +189,24 @@ def _materialize(spec_tail, leaf_shape, mesh: Mesh, mode: str,
     return P(*(lead + tail))
 
 
-def _spec_for_quant_dict(leaf: dict, spec_tail, mesh: Mesh, mode: str,
-                         use_tp: bool = True):
-    """Serving-format dict leaf: codes keep the weight spec; planes add a
-    bit-plane dim; scale shards only its non-singleton dims."""
-    out = {}
-    if "codes" in leaf:
-        out["codes"] = _materialize(spec_tail, leaf["codes"].shape, mesh, mode,
-                                    use_tp)
-    if "planes" in leaf:
-        pl = leaf["planes"].shape           # (..., 5, K//8, N)
-        out["planes"] = _materialize((None,) + tuple(spec_tail), pl, mesh,
-                                     mode, use_tp)
-    sc = leaf["scale"].shape
+def _spec_for_qt(leaf: QuantizedTensor, spec_tail, mesh: Mesh, mode: str,
+                 use_tp: bool = True) -> QuantizedTensor:
+    """QuantizedTensor leaf: unpacked codes keep the weight spec; packed
+    planes prepend a replicated bit-plane dim; scale shards only its
+    non-singleton dims.  Returns a QuantizedTensor *of specs* (same static
+    format metadata), so spec trees and param trees stay structure-equal for
+    device_put / out_shardings."""
+    data_tail = ((None,) + tuple(spec_tail)) if leaf.packed else spec_tail
+    data = _materialize(data_tail, leaf.data.shape, mesh, mode, use_tp)
+    sc = leaf.scale.shape
     sc_tail = [ax if sc[-len(spec_tail) + i] > 1 else None
                for i, ax in enumerate(spec_tail)]
-    out["scale"] = _materialize(tuple(sc_tail), sc, mesh, mode, use_tp)
-    return out
+    scale = _materialize(tuple(sc_tail), sc, mesh, mode, use_tp)
+    return QuantizedTensor(data, scale, leaf.fmt, leaf.packed)
 
 
-def _is_leafdict(x):
-    return isinstance(x, dict) and ("codes" in x or "planes" in x) and "scale" in x
+def _is_qt(x):
+    return isinstance(x, QuantizedTensor)
 
 
 def param_specs(params, cfg, mesh: Mesh, mode: str = "serve"):
@@ -217,23 +218,23 @@ def param_specs(params, cfg, mesh: Mesh, mode: str = "serve"):
         # with >16-way batch sharding provokes involuntary rematerialization
         # in the SPMD partitioner (observed: 217 GB replicated logits).
         def repl(leaf):
-            if _is_leafdict(leaf):
-                return {k: P() for k in leaf}
+            if _is_qt(leaf):
+                return QuantizedTensor(P(), P(), leaf.fmt, leaf.packed)
             return P()
-        return jax.tree_util.tree_map(repl, params, is_leaf=_is_leafdict)
+        return jax.tree_util.tree_map(repl, params, is_leaf=_is_qt)
 
     def one(path, leaf):
         p = _path_str(path)
         spec_tail = _logical_spec(p, cfg, mesh)
-        if _is_leafdict(leaf):
+        if _is_qt(leaf):
             if spec_tail is None:
-                return {k: P() for k in leaf}
-            return _spec_for_quant_dict(leaf, spec_tail, mesh, mode, use_tp)
+                return QuantizedTensor(P(), P(), leaf.fmt, leaf.packed)
+            return _spec_for_qt(leaf, spec_tail, mesh, mode, use_tp)
         if spec_tail is None or leaf.ndim < len(spec_tail):
             return P()
         return _materialize(spec_tail, leaf.shape, mesh, mode, use_tp)
 
-    return jax.tree_util.tree_map_with_path(one, params, is_leaf=_is_leafdict)
+    return jax.tree_util.tree_map_with_path(one, params, is_leaf=_is_qt)
 
 
 def batch_specs(cfg, mesh: Mesh, batch_tree, seq_shard: bool = False):

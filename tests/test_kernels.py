@@ -92,8 +92,7 @@ def test_ops_dispatch_cpu_matches_interpret(monkeypatch):
     rng = np.random.default_rng(2)
     x = jnp.asarray(rng.normal(size=(4, 10, 64)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(64, 48)).astype(np.float32))
-    q = psi.quantize_weights(w, 8, axis=0)
-    leaf = {"codes": q.codes, "scale": q.scale}
+    leaf = psi.quantize_weights(w, 8, axis=0)
     got_ref = ops.psi_matmul(x, leaf)
     monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
     got_kernel = ops.psi_matmul(x, leaf)
@@ -167,20 +166,37 @@ class TestGpuFastPath:
         calls = []
         monkeypatch.setattr(ops, "_backend", lambda: "gpu")
         monkeypatch.setattr(
-            ops._ref, "psi_matmul_int5_dequant",
-            lambda *a: calls.append("dequant5") or ref.psi_matmul_int5_ref(*a))
+            ops._ref, "psi_matmul_packed_dequant",
+            lambda x, p, s, b: calls.append(f"dequant_packed{b}")
+            or ref.psi_matmul_packed_ref(x, p, s, b))
         monkeypatch.setattr(
-            ops._ref, "psi_matmul_int8_dequant",
-            lambda *a: calls.append("dequant8") or ref.psi_matmul_int8_ref(*a))
+            ops._ref, "psi_matmul_codes_dequant",
+            lambda *a: calls.append("dequant_codes")
+            or ref.psi_matmul_codes_ref(*a))
         rng = np.random.default_rng(9)
         x = jnp.asarray(rng.normal(size=(2, 64)).astype(np.float32))
         w = jnp.asarray(rng.normal(size=(64, 40)).astype(np.float32))
-        q5 = psi.quantize_weights(w, 5, axis=0)
-        ops.psi_matmul(x, {"planes": psi.pack_int5(q5.codes),
-                           "scale": q5.scale})
-        q8 = psi.quantize_weights(w, 8, axis=0)
-        ops.psi_matmul(x, {"codes": q8.codes, "scale": q8.scale})
-        assert calls == ["dequant5", "dequant8"]
+        ops.psi_matmul(x, psi.quantize_weights(w, 5, axis=0).pack())
+        ops.psi_matmul(x, psi.quantize_weights(w, 8, axis=0))
+        assert calls == ["dequant_packed5", "dequant_codes"]
+
+
+def test_packed_kernel_every_sub_byte_width():
+    """One kernel body serves every registered sub-byte format: the
+    interpret-mode Pallas packed kernel matches the oracle for each."""
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(64, 24)).astype(np.float32))
+    for bits in psi.registered_bits():
+        if not psi.get_format(bits).sub_byte:
+            continue
+        q = psi.quantize_weights(w, bits, axis=0).pack()
+        scale = q.scale.reshape(-1)
+        got = pk.psi_matmul_packed(x, q.data, scale, bits=bits,
+                                   interpret=True)
+        want = ref.psi_matmul_packed_ref(x, q.data, scale, bits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_kernel_matches_float_matmul_within_quant_error():

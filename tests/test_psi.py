@@ -92,6 +92,82 @@ class TestMOA:
         assert np.array_equal(np.asarray(got), ops.sum(0))
 
 
+class TestFormatRegistry:
+    """PsiFormat registry: every registered width's decomposition meets its
+    certified metadata; QuantizedTensor round-trips as a pytree."""
+
+    def test_registered_widths_cover_sub_byte_range(self):
+        assert set(psi.registered_bits()) == set(range(2, 9))
+
+    @pytest.mark.parametrize("bits", sorted(psi.DEFAULT_N_PSI))
+    def test_declared_error_bound_is_met(self, bits):
+        """The value table's exhaustive error never exceeds the format's
+        declared worst_case_rel_error (and `exact` means zero error)."""
+        fmt = psi.get_format(bits)
+        w = np.arange(fmt.w_min, fmt.w_max + 1)
+        vals = np.asarray(fmt.value_table())
+        rel = np.abs(vals - w) / np.maximum(np.abs(w), 1)
+        assert rel.max() <= fmt.worst_case_rel_error + 1e-12
+        assert fmt.exact == bool(np.array_equal(vals, w))
+
+    def test_paper_table1_bounds(self):
+        """INT8 exact, INT5 <= 9% worst case (paper Table I)."""
+        assert psi.get_format(8).exact
+        f5 = psi.get_format(5)
+        assert not f5.exact
+        assert abs(f5.worst_case_rel_error - 1 / 11) < 1e-12
+
+    @pytest.mark.parametrize("bits", sorted(psi.DEFAULT_N_PSI))
+    def test_error_monotone_in_psi_terms(self, bits):
+        """More PSI terms never increase the worst-case error, and the
+        budget n_psi+1 is at least as accurate as the registered one."""
+        fmt = psi.get_format(bits)
+        w = np.arange(fmt.w_min, fmt.w_max + 1)
+        prev = None
+        for n in range(1, fmt.n_psi + 2):
+            vals = psi.psi_value_table(bits, n_psi=n)
+            err = (np.abs(vals - w) / np.maximum(np.abs(w), 1)).max()
+            if prev is not None:
+                assert err <= prev + 1e-12, (bits, n)
+            prev = err
+
+    @pytest.mark.parametrize("packed", [False, True])
+    def test_quantized_tensor_pytree_roundtrip(self, packed):
+        rng = np.random.default_rng(7)
+        w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+        q = psi.quantize_weights(w, 5, axis=0)
+        if packed:
+            q = q.pack()
+        leaves, treedef = jax.tree_util.tree_flatten(q)
+        assert len(leaves) == 2          # (data, scale); fmt/packed static
+        q2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert q2.fmt == q.fmt and q2.packed == q.packed
+        assert np.array_equal(np.asarray(q2.codes), np.asarray(q.codes))
+        # structure equality includes the static format metadata
+        q3 = psi.quantize_weights(w, 8, axis=0)
+        assert (jax.tree_util.tree_structure(q)
+                != jax.tree_util.tree_structure(q3))
+
+    @given(st.sampled_from([2, 3, 4, 5, 6, 7]), st.integers(1, 3))
+    @settings(max_examples=30, deadline=None)
+    def test_pack_unpack_roundtrip_any_width(self, bits, seed):
+        fmt = psi.get_format(bits)
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(fmt.w_min, fmt.w_max + 1,
+                             size=(8 * seed, 16)).astype(np.int8)
+        codes = np.asarray(psi.psi_project_int(jnp.asarray(codes), bits))
+        packed = psi.pack_codes(jnp.asarray(codes), bits)
+        assert packed.size == codes.size * bits / 8
+        assert np.array_equal(
+            np.asarray(psi.unpack_codes(packed, bits)), codes)
+
+    def test_unknown_width_raises(self):
+        with pytest.raises(ValueError):
+            psi.get_format(9)
+        with pytest.raises(ValueError):
+            psi.get_format("int5")
+
+
 class TestFloatQuant:
     def test_quantize_dequantize_error_bound(self):
         rng = np.random.default_rng(0)
