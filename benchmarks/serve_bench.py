@@ -1,20 +1,33 @@
-"""Serving benchmark: static-batch vs continuous-batch on one arrival trace.
+"""Serving benchmark: scheduling policy AND cache layout on one trace.
 
-Replays the same Poisson arrival trace (heterogeneous per-request decode
-budgets) through the slot-based engine twice — once with admission barriered
-until the whole batch drains (classic static batching), once with
-iteration-level admission into free slots (continuous batching, DESIGN.md §3)
-— and reports tokens/s plus p50/p99 request latency for each.  Both runs use
-the identical jitted prefill/decode functions, so the delta isolates the
-scheduling policy: static batching pays (a) the convoy effect — admission
-waits for the slowest sequence in the batch — and (b) dead decode slots
-between a sequence's retirement and the batch barrier.
+Three sections, all replaying the same Poisson arrival trace (heterogeneous
+per-request prompt lengths and decode budgets) and all asserting greedy
+outputs are token-identical — scheduling and cache layout may only change
+*when and where* work runs, never the results:
+
+1. **static vs continuous** (DESIGN.md §3): admission barriered until the
+   whole batch drains vs iteration-level admission into free slots.  The
+   delta isolates the scheduling policy: static pays the convoy effect and
+   dead slots between retirement and the batch barrier.
+2. **dense vs paged layout** at equal geometry: same ``max_batch`` /
+   ``max_seq``, reporting the cache-memory columns (dense slab bytes vs
+   paged pool bytes at equal capacity, peak block utilization %).
+3. **capacity at equal cache bytes**: a dense server provisions
+   ``max_batch`` worst-case slots; a paged server with the SAME usable
+   cache bytes (``n_blocks * block_size == max_batch * max_seq``) but twice
+   the slots admits strictly more concurrent requests, because blocks are
+   reserved per request (bucketed prompt + its own ``max_new``) instead of
+   per worst-case slot.
+
+Results go to stdout AND to a machine-readable ``BENCH_serve.json`` (like
+``BENCH_quant.json``) so CI can track the serving trajectory across PRs.
 
   PYTHONPATH=src python -m benchmarks.serve_bench --arch qwen3-8b --reduced \\
-      --quant psi8
+      --quant psi8 [--out BENCH_serve.json]
 
 Sharded serving (mesh-native Executor, DESIGN.md §5) runs the same bench
-with decode slots partitioned over the data axis — token-identical results:
+with decode slots and cache blocks partitioned over the data axis —
+token-identical results:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \\
       python -m benchmarks.serve_bench --arch qwen3-8b --reduced \\
@@ -23,9 +36,12 @@ with decode slots partitioned over the data axis — token-identical results:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from repro.launch.serve import add_serve_args, build_server, trace_from_args
+
+DEFAULT_OUT = "BENCH_serve.json"
 
 
 def _fmt(stats):
@@ -33,60 +49,165 @@ def _fmt(stats):
             f"latency p50 {stats['p50_latency_s'] * 1e3:7.1f}ms "
             f"p99 {stats['p99_latency_s'] * 1e3:7.1f}ms | "
             f"ttft p50 {stats['p50_ttft_s'] * 1e3:6.1f}ms | "
-            f"{stats['decode_steps']} steps")
+            f"{stats['decode_steps']} steps | peak "
+            f"{stats['peak_concurrency']} live")
 
 
-def run_bench(args):
+def _tokens_by_rid(done):
+    return {r.rid: tuple(r.tokens) for r in done}
+
+
+def _assert_identical(a, b, what):
+    ta, tb = _tokens_by_rid(a), _tokens_by_rid(b)
+    assert ta == tb, f"token divergence across {what}"
+
+
+def _clone_args(args, **over):
+    ns = argparse.Namespace(**vars(args))
+    for k, v in over.items():
+        setattr(ns, k, v)
+    return ns
+
+
+def run_bench(args, out_path=None):
     server, cfg = build_server(args)
 
-    def trace():
-        return trace_from_args(args, cfg)
+    def trace(a=args):
+        return trace_from_args(a, cfg)
 
-    # Warm up every shape once up front; per-mode serve() then skips warmup so
-    # both modes run against the same compiled functions.
+    # ---- 1. scheduling policy (on the configured/default layout) ----
     server.warmup(trace())
     done_s, stat_s = server.serve(trace(), continuous=False, warmup=False)
     done_c, stat_c = server.serve(trace(), continuous=True, warmup=False)
-
-    # Greedy decode on the same trace must generate identical tokens — the
-    # scheduling policy may only change *when* work runs, never the results.
-    for rs, rc in zip(sorted(done_s, key=lambda r: r.rid),
-                      sorted(done_c, key=lambda r: r.rid)):
-        assert rs.tokens == rc.tokens, f"req {rs.rid} diverged across modes"
+    _assert_identical(done_s, done_c, "static/continuous")
 
     speedup = stat_c["tok_per_s"] / stat_s["tok_per_s"]
     p99_ratio = stat_c["p99_latency_s"] / stat_s["p99_latency_s"]
     mesh = server.executor.mesh
     print(f"  mesh      : {dict(mesh.shape)} "
           f"({stat_c['slot_shards']} slot shard(s) over the data axis)")
+    print(f"  layout    : {stat_c['cache_layout']} "
+          f"({stat_c['cache_bytes'] / 1e6:.2f} MB cache)")
     print(f"  static    : {_fmt(stat_s)}")
     print(f"  continuous: {_fmt(stat_c)}")
     print(f"  continuous/static: {speedup:.2f}x tokens/s, "
           f"{p99_ratio:.2f}x p99 latency "
           f"({stat_c['n_requests']} reqs, {stat_c['tokens']} tokens, "
           f"decode compiles: {stat_c['decode_compiles']})")
-    return stat_s, stat_c, speedup, p99_ratio
+
+    payload = {
+        "bench": "serve_bench", "arch": args.arch, "reduced": args.reduced,
+        "quant": args.quant, "mesh": dict(mesh.shape),
+        "requests": args.requests, "max_batch": args.max_batch,
+        "modes": {"static": stat_s, "continuous": stat_c},
+        "cont_vs_static_tok_per_s": round(speedup, 3),
+        "cont_vs_static_p99": round(p99_ratio, 3),
+    }
+
+    capacity_win = None
+    if server.paged:
+        # ---- 2. layout equivalence + cache-memory columns ----
+        dense_server, _ = build_server(_clone_args(args,
+                                                   cache_layout="dense",
+                                                   cache_blocks=None))
+        done_d, stat_d = dense_server.serve(trace(), continuous=True)
+        _assert_identical(done_c, done_d, "paged/dense layouts")
+        dense_b, paged_b = stat_d["cache_bytes"], stat_c["cache_bytes"]
+        print(f"  cache mem : dense {dense_b / 1e6:.2f} MB vs paged "
+              f"{paged_b / 1e6:.2f} MB at equal capacity "
+              f"({stat_c['n_blocks']}x{stat_c['block_size']} blocks "
+              f"+ {args.max_batch} scratch, peak block util "
+              f"{stat_c['block_util_pct']}%)")
+        payload["layout_equivalence"] = {
+            "token_identical": True,
+            "dense_cache_bytes": dense_b,
+            "paged_cache_bytes": paged_b,
+            "paged_block_util_pct": stat_c["block_util_pct"],
+            "dense": stat_d,
+        }
+
+        # ---- 3. capacity at an equal cache-byte budget ----
+        # Same usable KV bytes as the dense slab (n_blocks * block_size ==
+        # max_batch * max_seq), twice the decode slots: heterogeneous
+        # requests reserve only their own need, so strictly more of them
+        # fit concurrently.  A heterogeneous trace (prompt jitter + wide
+        # decode budgets) is what a dense worst-case slab over-provisions.
+        cap_args = _clone_args(
+            args, max_batch=2 * args.max_batch,
+            prompt_jitter=max(args.prompt_jitter, 8), min_new=1)
+        cap_dense, _ = build_server(_clone_args(cap_args,
+                                                cache_layout="dense",
+                                                cache_blocks=None,
+                                                max_batch=args.max_batch))
+        # budget derived from the CAPACITY dense baseline's own geometry
+        # (its max_seq can exceed the section-1 server's when the jitter
+        # bump widens the prompt bucket): usable paged rows == dense rows.
+        bsz = cap_dense.cfg.cache_block_size
+        budget_blocks = args.max_batch * (cap_dense.max_seq // bsz)
+        cap_paged, _ = build_server(_clone_args(
+            cap_args, cache_blocks=budget_blocks))
+        assert cap_paged.max_seq == cap_dense.max_seq
+        dtrace = trace(cap_args)
+        ptrace = trace(cap_args)
+        done_cd, stat_cd = cap_dense.serve(dtrace, continuous=True)
+        done_cp, stat_cp = cap_paged.serve(ptrace, continuous=True)
+        _assert_identical(done_cd, done_cp, "capacity dense/paged")
+        capacity_win = (stat_cp["peak_concurrency"],
+                        stat_cd["peak_concurrency"])
+        print(f"  capacity  : equal budget "
+              f"{stat_cd['cache_bytes'] / 1e6:.2f} MB dense KV -> paged "
+              f"admits {stat_cp['peak_concurrency']} concurrent vs dense "
+              f"{stat_cd['peak_concurrency']} "
+              f"({stat_cp['tok_per_s'] / stat_cd['tok_per_s']:.2f}x "
+              f"tokens/s)")
+        assert stat_cp["peak_concurrency"] > stat_cd["peak_concurrency"], (
+            "paged layout must admit strictly more concurrent requests "
+            "than dense at the same cache-byte budget")
+        payload["capacity"] = {
+            "cache_byte_budget_dense": stat_cd["cache_bytes"],
+            "paged_usable_blocks": cap_paged.executor.n_blocks,
+            "dense_slots": args.max_batch,
+            "paged_slots": 2 * args.max_batch,
+            "dense": stat_cd,
+            "paged": stat_cp,
+            "dense_peak_concurrency": stat_cd["peak_concurrency"],
+            "paged_peak_concurrency": stat_cp["peak_concurrency"],
+        }
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {out_path}")
+    return stat_s, stat_c, speedup, p99_ratio, capacity_win
 
 
 def run():
-    """Entry point for the benchmarks.run harness (reduced CPU defaults)."""
+    """Entry point for the benchmarks.run harness (reduced CPU defaults);
+    emits the machine-readable BENCH_serve.json."""
     ap = argparse.ArgumentParser()
     add_serve_args(ap)
     args = ap.parse_args(["--arch", "qwen3-8b", "--reduced", "--quant",
                           "psi8"])
     t0 = time.time()
-    _, stat_c, speedup, p99_ratio = run_bench(args)
+    _, stat_c, speedup, p99_ratio, cap = run_bench(args,
+                                                   out_path=DEFAULT_OUT)
     us = (time.time() - t0) * 1e6
-    return [("serve_bench", us,
-             f"cont_vs_static={speedup:.2f}x;p99_ratio={p99_ratio:.2f};"
-             f"tok_per_s={stat_c['tok_per_s']:.0f}")]
+    derived = (f"cont_vs_static={speedup:.2f}x;p99_ratio={p99_ratio:.2f};"
+               f"tok_per_s={stat_c['tok_per_s']:.0f};"
+               f"layout={stat_c['cache_layout']}")
+    if cap:
+        derived += f";capacity_paged_vs_dense={cap[0]}v{cap[1]}"
+    return [("serve_bench", us, derived)]
 
 
 def main():
     ap = argparse.ArgumentParser()
     add_serve_args(ap)
+    ap.add_argument("--out", default=None,
+                    help=f"write machine-readable results (default off on "
+                         f"the CLI; benchmarks.run writes {DEFAULT_OUT})")
     args = ap.parse_args()
-    run_bench(args)
+    run_bench(args, out_path=args.out)
 
 
 if __name__ == "__main__":

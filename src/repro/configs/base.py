@@ -76,6 +76,14 @@ class ModelConfig:
     # traffic at large batch; see EXPERIMENTS.md §Perf) ---
     kv_quant: str = ""                     # "" | "int8"
 
+    # --- decode-cache layout (DESIGN.md §3): "paged" stores attention KV in
+    # a block pool indexed through per-slot block tables (admission bounded
+    # by actual tokens, not worst-case sequence); "dense" is the classic
+    # per-slot slab and stays required for recurrent/SSM state, SWA rings,
+    # and encoder-decoder caches.  "auto" resolves per family. ---
+    cache_layout: str = "auto"             # auto | dense | paged
+    cache_block_size: int = 16             # positions per paged block
+
     # --- citation bookkeeping (verification tier from the assignment) ---
     source: str = ""
 
@@ -98,6 +106,31 @@ class ModelConfig:
     @property
     def is_attention_free(self) -> bool:
         return self.family == "ssm"
+
+    @property
+    def paged_capable(self) -> bool:
+        """True when every decode-cache leaf is full-attention KV — the only
+        state a block pool can hold.  Recurrent/SSM state is fixed-size (no
+        paging to do), SWA rings wrap past ``max_seq`` (a bounded block
+        table cannot), and whisper's decoder carries ``enc_out``."""
+        return (self.family in ("dense", "moe", "vlm")
+                and self.attn_type == "full")
+
+    @property
+    def resolved_cache_layout(self) -> str:
+        """``cache_layout`` with "auto" resolved: paged for attention
+        families, dense where the state is not pageable (DESIGN.md §3)."""
+        if self.cache_layout == "auto":
+            return "paged" if self.paged_capable else "dense"
+        if self.cache_layout not in ("dense", "paged"):
+            raise ValueError(f"unknown cache_layout {self.cache_layout!r} "
+                             f"(want auto | dense | paged)")
+        if self.cache_layout == "paged" and not self.paged_capable:
+            raise ValueError(
+                f"{self.name or self.family}: cache_layout=paged requires a "
+                f"pure full-attention stack (family {self.family!r}, "
+                f"attn_type {self.attn_type!r} must use dense)")
+        return self.cache_layout
 
     @property
     def sub_quadratic(self) -> bool:

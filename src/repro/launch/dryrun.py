@@ -89,8 +89,11 @@ def input_specs(arch: str, shape_name: str, quant: str = "psi8",
     else:
         batch["pos"] = _sds((B, 1), jnp.int32)
     model = build_model(cfg)
+    # The roofline decode cells model the steady dense state (every slot at
+    # the full context depth), where paging saves nothing — pin the dense
+    # layout so the analytic byte accounting matches the cache that lowers.
     cache = jax.eval_shape(
-        lambda: model.init_cache(B, S, jnp.dtype(cfg.dtype)))
+        lambda: model.init_cache(B, S, jnp.dtype(cfg.dtype), layout="dense"))
     return {"batch": batch, "cache": abstract_tree(cache)}
 
 
@@ -160,10 +163,11 @@ def build_step(arch: str, shape_name: str, quant: str, mesh,
         bsh = shr.to_shardings(shr.batch_specs(cfg, mesh, batch), mesh)
         cache_shape = jax.eval_shape(
             lambda p, b: model.prefill(p, b)[1], params, batch)
-        csh = shr.to_shardings(shr.cache_specs(cfg, mesh, cache_shape["kv"]), mesh)
+        # typed KVCache: cache_specs reads the layout off the object and
+        # returns a structure-equal KVCache of specs (DESIGN.md §5)
+        csh = shr.to_shardings(shr.cache_specs(cfg, mesh, cache_shape), mesh)
         logits_sh = _logits_sharding(shape.global_batch)
-        out_sh = (logits_sh, {"kv": csh, **({"enc_out": NamedSharding(mesh, P())}
-                                            if cfg.family == "encdec" else {})})
+        out_sh = (logits_sh, csh)
 
         def prefill_step(params, batch):
             return model.prefill(params, batch)
@@ -174,11 +178,7 @@ def build_step(arch: str, shape_name: str, quant: str, mesh,
     spec = input_specs(arch, shape_name, quant, kv_quant=kv_quant)
     batch, cache = spec["batch"], spec["cache"]
     bsh = shr.to_shardings(shr.batch_specs(cfg, mesh, batch), mesh)
-    csh_kv = shr.to_shardings(shr.cache_specs(cfg, mesh, cache["kv"]), mesh)
-    csh = {"kv": csh_kv}
-    if "enc_out" in cache:
-        csh["enc_out"] = NamedSharding(
-            mesh, shr.cache_specs(cfg, mesh, {"enc_out": cache["enc_out"]})["enc_out"])
+    csh = shr.to_shardings(shr.cache_specs(cfg, mesh, cache), mesh)
     logits_sh = _logits_sharding(shape.global_batch)
 
     def decode_step(params, batch, cache):

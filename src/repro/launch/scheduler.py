@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,17 +39,26 @@ class Request:
 
     @property
     def latency_s(self) -> float:
-        """Arrival -> completion (includes queueing — the p99 that matters)."""
-        return (self.finish_s or 0.0) - self.arrival_s
+        """Arrival -> completion (includes queueing — the p99 that matters).
+        NaN while the request is unfinished (a half-served request has no
+        latency; ``summarize`` skips NaNs)."""
+        if self.finish_s is None:
+            return float("nan")
+        return self.finish_s - self.arrival_s
 
     @property
     def ttft_s(self) -> float:
-        """Arrival -> first generated token."""
-        return (self.first_token_s or 0.0) - self.arrival_s
+        """Arrival -> first generated token; NaN before the first token."""
+        if self.first_token_s is None:
+            return float("nan")
+        return self.first_token_s - self.arrival_s
 
     @property
     def queue_s(self) -> float:
-        return (self.admit_s or 0.0) - self.arrival_s
+        """Arrival -> admission; NaN while still queued."""
+        if self.admit_s is None:
+            return float("nan")
+        return self.admit_s - self.arrival_s
 
     @property
     def out(self) -> np.ndarray:
@@ -138,6 +147,119 @@ class SlotAllocator:
 
 
 # ---------------------------------------------------------------------------
+# Block allocation (paged KV cache, DESIGN.md §3).
+# ---------------------------------------------------------------------------
+class BlockAllocator:
+    """Host-side allocator for the paged KV cache's fixed pool of
+    ``n_blocks`` physical blocks, optionally partitioned into per-shard
+    pools mirroring the pool tensor's block-over-data layout
+    (``sharding.block_shard_map``).
+
+    Lifecycle per request (driven by the Scheduler/engine):
+
+      * ``reserve(rid, n)`` at admission — books the request's WORST-CASE
+        block count (bucketed prompt + its own ``max_new``) so a running
+        request can never starve mid-decode; admission is gated on
+        ``can_reserve`` (free minus everyone's outstanding reservations).
+      * ``alloc(rid)`` on demand — prefill insertion takes the prompt's
+        blocks, decode takes one more each time a sequence crosses a
+        block boundary; every alloc draws down the reservation.
+      * ``release(rid)`` at retirement — returns every owned block AND the
+        unused tail of the reservation (early EOS gives capacity back).
+
+    Invariants (property-tested): a block is owned by at most one request;
+    ``free_count + in_use == n_blocks`` always; ``high_watermark`` is
+    monotone; a full admit/alloc/release trace replay restores the exact
+    initial free set (no leaks, no double-frees).
+    """
+
+    def __init__(self, n_blocks: int, n_shards: int = 1,
+                 shard_of: Optional[Sequence[int]] = None):
+        self.n_blocks = n_blocks
+        self.n_shards = max(int(n_shards), 1)
+        if shard_of is None:  # contiguous chunks, GSPMD's layout
+            shard_of = [(b * self.n_shards) // n_blocks
+                        for b in range(n_blocks)]
+        self.shard_of = [int(s) for s in shard_of]
+        assert len(self.shard_of) == n_blocks
+        self._free: List[List[int]] = [
+            sorted((b for b in range(n_blocks) if self.shard_of[b] == i),
+                   reverse=True)                          # pop() -> lowest
+            for i in range(self.n_shards)]
+        self.owner: List[Optional[int]] = [None] * n_blocks  # block -> rid
+        self._owned: Dict[int, List[int]] = {}               # rid -> blocks
+        self._reserved: Dict[int, int] = {}    # rid -> outstanding blocks
+        self.high_watermark = 0                # peak blocks ever in use
+
+    # ---- accounting ----
+    @property
+    def free_count(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_blocks - self.free_count
+
+    @property
+    def reserved_total(self) -> int:
+        """Outstanding (not yet materialized) reservations."""
+        return sum(self._reserved.values())
+
+    def owned_by(self, rid: int) -> List[int]:
+        return list(self._owned.get(rid, ()))
+
+    # ---- lifecycle ----
+    def can_reserve(self, n: int) -> bool:
+        return n <= self.free_count - self.reserved_total
+
+    def reserve(self, rid: int, n: int) -> None:
+        if rid in self._reserved or rid in self._owned:
+            raise ValueError(f"request {rid} already holds a reservation")
+        if not self.can_reserve(n):
+            raise ValueError(
+                f"cannot reserve {n} blocks: {self.free_count} free, "
+                f"{self.reserved_total} already promised")
+        self._reserved[rid] = n
+
+    def alloc(self, rid: int, shard: Optional[int] = None) -> int:
+        """Take one block for ``rid``, drawing down its reservation.
+        ``shard`` is a placement hint (the slot's data shard): honored when
+        that shard has free blocks, else falls back to the fullest pool."""
+        if self._reserved.get(rid, 0) <= 0:
+            raise ValueError(
+                f"request {rid} allocating beyond its reservation — "
+                f"admission accounting bug")
+        if shard is not None and 0 <= shard < self.n_shards \
+                and self._free[shard]:
+            pool = self._free[shard]
+        else:
+            pool = max(self._free, key=len)
+        if not pool:
+            raise ValueError("no free blocks despite reservation — "
+                             "allocator invariant broken")
+        blk = pool.pop()
+        self.owner[blk] = rid
+        self._owned.setdefault(rid, []).append(blk)
+        self._reserved[rid] -= 1
+        self.high_watermark = max(self.high_watermark, self.in_use)
+        return blk
+
+    def release(self, rid: int) -> int:
+        """Free every block owned by ``rid`` and drop the unused remainder
+        of its reservation; returns how many blocks were freed."""
+        blocks = self._owned.pop(rid, [])
+        for blk in blocks:
+            if self.owner[blk] != rid:
+                raise ValueError(f"block {blk} not owned by request {rid}")
+            self.owner[blk] = None
+            pool = self._free[self.shard_of[blk]]
+            pool.append(blk)
+            pool.sort(reverse=True)
+        self._reserved.pop(rid, None)
+        return len(blocks)
+
+
+# ---------------------------------------------------------------------------
 # The scheduler proper.
 # ---------------------------------------------------------------------------
 class Scheduler:
@@ -154,7 +276,9 @@ class Scheduler:
 
     def __init__(self, requests: Sequence[Request], max_batch: int,
                  n_shards: int = 1,
-                 shard_of: Optional[Sequence[int]] = None):
+                 shard_of: Optional[Sequence[int]] = None,
+                 blocks: Optional[BlockAllocator] = None,
+                 blocks_needed: Optional[Callable[[Request], int]] = None):
         for r in requests:
             if r.admit_s is not None or r.tokens:
                 raise ValueError(
@@ -164,6 +288,14 @@ class Scheduler:
                                      key=lambda r: (r.arrival_s, r.rid)))
         self.waiting: deque = deque()
         self.slots = SlotAllocator(max_batch, n_shards, shard_of)
+        # Paged cache (DESIGN.md §3): admission additionally gated on block
+        # availability — a free slot is not enough, the request's worst-case
+        # block count (``blocks_needed``, supplied by the engine since
+        # bucketing policy lives there) must be reservable too.
+        self.blocks = blocks
+        self._blocks_needed = blocks_needed
+        if (blocks is None) != (blocks_needed is None):
+            raise ValueError("blocks and blocks_needed come as a pair")
         self.running: Dict[int, Request] = {}       # slot -> request
         self.finished: List[Request] = []
 
@@ -182,7 +314,13 @@ class Scheduler:
         (slot, request) assignments for the engine to prefill + insert."""
         admitted = []
         while self.waiting and self.slots.free_count:
-            req = self.waiting.popleft()
+            req = self.waiting[0]
+            if self.blocks is not None:
+                need = self._blocks_needed(req)
+                if not self.blocks.can_reserve(need):
+                    break          # FIFO: head-of-line waits for capacity
+                self.blocks.reserve(req.rid, need)
+            self.waiting.popleft()
             slot = self.slots.alloc(req.rid)
             req.slot = slot
             req.admit_s = now
@@ -194,6 +332,8 @@ class Scheduler:
         req = self.running.pop(slot)
         req.finish_s = now
         self.slots.release(slot)
+        if self.blocks is not None:
+            self.blocks.release(req.rid)
         self.finished.append(req)
         return req
 
@@ -209,9 +349,18 @@ class Scheduler:
 # ---------------------------------------------------------------------------
 # Metrics.
 # ---------------------------------------------------------------------------
+def _pctile(vals: np.ndarray, q: float) -> float:
+    """Percentile over the finite entries only — unfinished requests report
+    NaN accounting (see Request.latency_s) and must not poison the
+    aggregate; all-NaN input degrades to 0.0."""
+    vals = vals[~np.isnan(vals)]
+    return float(np.percentile(vals, q)) if vals.size else 0.0
+
+
 def summarize(requests: Sequence[Request], wall_s: float,
               mode: str = "") -> Dict:
-    """Throughput + latency percentiles over a finished request set."""
+    """Throughput + latency percentiles over a request set (unfinished
+    requests contribute tokens but are skipped in the percentiles)."""
     if not requests:
         return {"mode": mode, "n_requests": 0, "tokens": 0, "wall_s": wall_s,
                 "tok_per_s": 0.0, "p50_latency_s": 0.0, "p99_latency_s": 0.0,
@@ -225,8 +374,8 @@ def summarize(requests: Sequence[Request], wall_s: float,
         "tokens": tokens,
         "wall_s": wall_s,
         "tok_per_s": tokens / wall_s if wall_s else float("inf"),
-        "p50_latency_s": float(np.percentile(lats, 50)),
-        "p99_latency_s": float(np.percentile(lats, 99)),
-        "p50_ttft_s": float(np.percentile(ttfts, 50)),
-        "p99_ttft_s": float(np.percentile(ttfts, 99)),
+        "p50_latency_s": _pctile(lats, 50),
+        "p99_latency_s": _pctile(lats, 99),
+        "p50_ttft_s": _pctile(ttfts, 50),
+        "p99_ttft_s": _pctile(ttfts, 99),
     }

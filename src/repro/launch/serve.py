@@ -1,15 +1,26 @@
 """Continuous-batching serving engine over PSI-quantized weights.
 
-The engine owns ``max_batch`` decode *slots* backed by one fixed-length
-batched KV cache.  A slot-based scheduler (``repro.launch.scheduler``) admits
-arriving requests into free slots mid-decode, retires sequences at EOS /
-``max_new`` (freeing the slot immediately for the next arrival), and the
-engine interleaves prefill of admissions with ongoing decode steps.  The
-jitted decode step is shape-stable — a fixed ``(max_batch, 1)`` token tensor
-plus an active-slot mask that freezes the cache rows of free slots — so XLA
-compiles it exactly once per serve lifetime (DESIGN.md §3).  The decode step
-runs entirely on the PSI serving format — on TPU the psi_matmul Pallas kernel
-reads 5/8-bit weights from HBM (DESIGN.md §2).
+The engine owns ``max_batch`` decode *slots* backed by one typed ``KVCache``
+(DESIGN.md §3).  Under the default **paged** layout (full-attention
+families) the cache is a pool of fixed-size blocks driven by host-side
+block tables: the scheduler's ``BlockAllocator`` reserves a request's
+worst-case blocks at admission, materializes them on demand during decode,
+and frees them at retirement — so admission is gated on *actual* token
+capacity instead of worst-case slots, and heterogeneous-length traffic fits
+more concurrent requests in the same cache bytes (``--cache-layout`` /
+``--block-size`` / ``--cache-blocks``).  The **dense** layout (per-slot
+``max_seq`` slabs) remains for recurrent/SSM state, SWA rings, and encdec.
+
+A slot-based scheduler (``repro.launch.scheduler``) admits arriving
+requests into free slots mid-decode, retires sequences at EOS / ``max_new``
+(freeing slot AND blocks immediately for the next arrival), and the engine
+interleaves prefill of admissions with ongoing decode steps.  The jitted
+decode step is shape-stable — a fixed ``(max_batch, 1)`` token tensor, an
+active-slot mask that freezes the cache rows of free slots, and (paged) a
+``(max_batch, n_bt)`` block-table input — so XLA compiles it exactly once
+per serve lifetime (DESIGN.md §3).  The decode step runs entirely on the
+PSI serving format — on TPU the psi_matmul Pallas kernel reads 5/8-bit
+weights from HBM (DESIGN.md §2).
 
 The Server is the HOST half only: scheduler loop, prompt buckets, latency
 accounting.  Every device interaction — mesh construction, sharded
@@ -41,9 +52,9 @@ from repro.configs import get_config, reduced_config
 from repro.core.quantizer import (parse_policy, parse_quant_mode,
                                   serving_mode_choices)
 from repro.launch.mesh import make_mesh
-from repro.launch.scheduler import (Request, Scheduler, poisson_trace,
-                                    summarize)
-from repro.models import build_model
+from repro.launch.scheduler import (BlockAllocator, Request, Scheduler,
+                                    poisson_trace, summarize)
+from repro.models import build_model, kvcache as kvc
 from repro.runtime.executor import Executor
 
 # Prompt lengths are rounded up to a multiple of this before prefill so the
@@ -73,8 +84,22 @@ class Server:
 
     def __init__(self, cfg, params, max_batch: int = 4, max_seq: int = 256,
                  eos_id: int = -1, bucket: int = PREFILL_BUCKET, mesh=None,
-                 executor: Optional[Executor] = None):
+                 executor: Optional[Executor] = None,
+                 n_blocks: Optional[int] = None):
         self.cfg = cfg
+        self.paged = cfg.resolved_cache_layout == kvc.PAGED
+        if n_blocks is not None and not self.paged:
+            raise ValueError(
+                "n_blocks/--cache-blocks only applies to the paged cache "
+                "layout; this server resolved to dense "
+                "(cfg.resolved_cache_layout)")
+        self.block_size = cfg.cache_block_size if self.paged else 0
+        if self.paged:
+            # Align the cache extent to the block grid: the paged read
+            # attends over n_bt * block_size key columns, and keeping that
+            # equal to the dense extent keeps the two layouts bit-identical
+            # (same reduction shapes) for the layout-equivalence tests.
+            max_seq = -(-max_seq // self.block_size) * self.block_size
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
@@ -89,7 +114,10 @@ class Server:
                     f"{executor.max_batch}, max_seq={executor.max_seq}; "
                     f"Server asked for {max_batch}/{max_seq}")
         self.executor = executor if executor is not None else Executor(
-            cfg, params, max_batch=max_batch, max_seq=max_seq, mesh=mesh)
+            cfg, params, max_batch=max_batch, max_seq=max_seq, mesh=mesh,
+            n_blocks=n_blocks if self.paged else None)
+        self.cache_bytes = kvc.cache_nbytes(jax.eval_shape(
+            self.executor._init_cache_fn))
         # Recurrent state absorbs pad tokens, so SSM/hybrid (and whisper's
         # decoder) prefill at exact prompt length instead of padded buckets.
         self._pad_ok = cfg.family not in ("ssm", "hybrid", "encdec")
@@ -99,6 +127,24 @@ class Server:
                              if self._swa_window else max_seq)
 
     # -------------------------------------------------------------- plumbing
+    def _blocks_needed(self, req: Request) -> int:
+        """Worst-case pool blocks for one request: the bucketed prefill
+        extent or the prompt+decode-budget extent, whichever is longer —
+        the admission gate reserves this so a running request can never
+        starve mid-decode (early EOS returns the unused tail)."""
+        need = max(self._bucket_len(len(req.prompt)),
+                   len(req.prompt) + req.max_new)
+        return kvc.blocks_for(need, self.block_size)
+
+    def _block_pref(self, slot: int) -> Optional[int]:
+        """Allocate a slot's blocks from its own data shard when the block
+        pools partition the same way the slots do (keeps the decode gather
+        shard-local); otherwise let the allocator balance."""
+        ex = self.executor
+        if ex.n_block_shards == ex.n_slot_shards:
+            return int(ex.slot_shards[slot])
+        return None
+
     def _bucket_len(self, n: int) -> int:
         if not self._pad_ok:
             return n
@@ -111,7 +157,8 @@ class Server:
             return n
         return sb
 
-    def _prefill_admits(self, cache, admits: Sequence[Tuple[int, Request]]):
+    def _prefill_admits(self, cache, admits: Sequence[Tuple[int, Request]],
+                        sched: Optional[Scheduler] = None, bt=None):
         """Prefill newly admitted requests and insert each into its slot.
 
         A single admission (the continuous steady state) runs a (1, Sb)
@@ -119,9 +166,23 @@ class Server:
         ``max_batch`` and prefills all rows at once, so both engines pay one
         compile per prompt bucket for each of the two batch shapes.
         Returns the first greedy token per admission, aligned with `admits`.
+
+        Paged layout: each admission's prompt blocks are allocated here
+        (drawing down the reservation made at admission) and written into
+        the host block table ``bt``; the insert scatters the prefilled rows
+        into exactly those blocks (a burst's shared padding beyond a row's
+        own allocation routes to the slot's scratch block).
         """
         lens = [len(r.prompt) for _, r in admits]
         sb = self._bucket_len(max(lens))
+        if self.paged:
+            for slot, req in admits:
+                nb = kvc.blocks_for(self._bucket_len(len(req.prompt)),
+                                    self.block_size)
+                pref = self._block_pref(slot)
+                bt[slot, :] = -1
+                for j in range(nb):
+                    bt[slot, j] = sched.blocks.alloc(req.rid, shard=pref)
         if not self._swa_window and not self.cfg.is_attention_free:
             # Full-attention cache extent: a longer prefill — or a decode
             # that runs past max_seq — would wrap the ring and silently
@@ -144,7 +205,8 @@ class Server:
         if len(set(lens)) > 1 and not pad_safe:
             firsts = []
             for slot, req in admits:
-                f, cache = self._prefill_admits(cache, [(slot, req)])
+                f, cache = self._prefill_admits(cache, [(slot, req)],
+                                                sched, bt)
                 firsts.extend(f)
             return firsts, cache
         B = 1 if len(admits) == 1 else self.max_batch
@@ -155,43 +217,83 @@ class Server:
             tl[i] = len(req.prompt)
         if len(admits) == 1:                     # fused prefill + insert
             slot = admits[0][0]
-            first, cache = self.executor.prefill_insert(toks, tl, cache, slot)
+            row = bt[slot] if self.paged else None
+            first, cache = self.executor.prefill_insert(toks, tl, cache,
+                                                        slot, block_row=row)
             return [int(first[0])], cache
         first, seq_cache = self.executor.prefill(toks, tl)
         first = np.asarray(first)
         slots = np.zeros((self.max_batch,), np.int32)
         valid = np.zeros((self.max_batch,), bool)
+        rows = (np.full((self.max_batch, self.executor.n_bt), -1, np.int32)
+                if self.paged else None)
         for i, (slot, _) in enumerate(admits):
             slots[i] = slot
             valid[i] = True
-        cache = self.executor.insert_burst(cache, seq_cache, slots, valid)
+            if self.paged:
+                rows[i] = bt[slot]
+        cache = self.executor.insert_burst(cache, seq_cache, slots, valid,
+                                           block_rows=rows)
         return [int(first[i]) for i in range(len(admits))], cache
 
-    def warmup(self, requests: Sequence[Request]) -> None:
-        """Compile every shape the trace will need (per prompt bucket: the
-        fused single-admission prefill+insert and the max_batch burst
-        prefill + row insert, plus the decode step) against a throwaway
-        cache, so serving measures steady-state latency, not XLA."""
+    def warmup(self, requests: Sequence[Request], verbose: bool = True) -> int:
+        """Compile every shape the trace CAN reach (per prompt bucket: the
+        fused single-admission prefill+insert, plus — only when the trace
+        can ever co-admit two requests — the max_batch burst prefill + row
+        insert, plus the decode step) against a throwaway cache, so serving
+        measures steady-state latency, not XLA.
+
+        A single-request trace (or a max_batch=1 engine) can never take the
+        burst path, so its shapes are skipped instead of paying their
+        compiles up front.  Returns the number of compiled shapes (also
+        logged, so compile-count regressions are visible in serve output).
+        """
         ex = self.executor
         buckets = sorted({self._bucket_len(len(r.prompt)) for r in requests})
+        # Burst admission needs >= 2 requests waiting at once; a 1-request
+        # trace provably cannot reach those shapes.
+        burst_reachable = len(requests) > 1 and self.max_batch > 1
         cache = ex.init_cache()
+        n_shapes = 0
+        brow = (np.full((ex.n_bt,), -1, np.int32) if self.paged else None)
         for sb in buckets:
             # single admission: fused prefill+insert (the only B=1 path)
             toks1 = np.zeros((1, sb), np.int32)
             tl1 = np.ones((1,), np.int32)
             _, cache = jax.block_until_ready(
-                ex.prefill_insert(toks1, tl1, cache, 0))
-            if self.max_batch > 1:
+                ex.prefill_insert(toks1, tl1, cache, 0, block_row=brow))
+            n_shapes += 1
+            if burst_reachable:
                 # admission burst: batched prefill + one scatter insert
                 toksB = np.zeros((self.max_batch, sb), np.int32)
                 tlB = np.ones((self.max_batch,), np.int32)
                 _, seq_cache = jax.block_until_ready(ex.prefill(toksB, tlB))
                 slots = np.arange(self.max_batch, dtype=np.int32)
+                rows = (np.full((self.max_batch, ex.n_bt), -1, np.int32)
+                        if self.paged else None)
                 cache = ex.insert_burst(cache, seq_cache, slots,
-                                        np.zeros((self.max_batch,), bool))
+                                        np.zeros((self.max_batch,), bool),
+                                        block_rows=rows)
+                n_shapes += 1
+        if burst_reachable:
+            # the burst insert compiles per bucket only when the prefilled
+            # seq cache's extent follows the bucket (paged); dense prefills
+            # at cache_len=max_seq, so one insert executable covers all
+            n_shapes += len(buckets) if self.paged else 1
         tok = np.zeros((self.max_batch, 1), np.int32)
         act = np.zeros((self.max_batch,), bool)
-        jax.block_until_ready(ex.decode(tok, tok, act, cache))
+        bt = (np.full((self.max_batch, ex.n_bt), -1, np.int32)
+              if self.paged else None)
+        jax.block_until_ready(ex.decode(tok, tok, act, cache, block_table=bt))
+        n_shapes += 1
+        if verbose:
+            skipped = 0 if burst_reachable else 2 * len(buckets)
+            print(f"[warmup] compiled {n_shapes} shapes "
+                  f"({len(buckets)} prompt bucket(s), layout "
+                  f"{'paged' if self.paged else 'dense'}"
+                  + (f", skipped {skipped} unreachable burst shape(s)"
+                     if skipped else "") + ")")
+        return n_shapes
 
     # ------------------------------------------------------------- the loop
     def serve(self, requests: Sequence[Request], continuous: bool = True,
@@ -216,16 +318,37 @@ class Server:
                     f"requests {bad} need more cache than max_seq="
                     f"{self.max_seq} (bucketed prompt + max_new); size the "
                     f"Server for the longest request")
+        if self.paged:
+            # same fail-fast for the block pool: a request whose worst case
+            # exceeds the whole pool could never reserve, and admission
+            # would head-of-line-block forever
+            bad = [r.rid for r in requests
+                   if self._blocks_needed(r) > ex.n_blocks]
+            if bad:
+                raise ValueError(
+                    f"requests {bad} need more blocks than the pool holds "
+                    f"(n_blocks={ex.n_blocks} of {self.block_size} "
+                    f"positions); grow --cache-blocks or shrink the "
+                    f"requests")
         if warmup:
             self.warmup(requests)
+        blocks = None
+        if self.paged:
+            blocks = BlockAllocator(ex.n_blocks, n_shards=ex.n_block_shards,
+                                    shard_of=ex.block_shards)
         sched = Scheduler(requests, self.max_batch,
-                          n_shards=ex.n_slot_shards, shard_of=ex.slot_shards)
+                          n_shards=ex.n_slot_shards, shard_of=ex.slot_shards,
+                          blocks=blocks,
+                          blocks_needed=(self._blocks_needed if blocks
+                                         is not None else None))
         cache = ex.init_cache()
         B = self.max_batch
         tok = np.zeros((B, 1), np.int32)
         pos = np.zeros((B, 1), np.int32)
         act = np.zeros((B,), bool)
+        bt = (np.full((B, ex.n_bt), -1, np.int32) if self.paged else None)
         steps = 0
+        peak_running = 0
         t0 = clock()
         while not sched.done:
             now = clock() - t0
@@ -233,13 +356,17 @@ class Server:
             if continuous or not sched.running:
                 admits = sched.admit(now)
                 if admits:
-                    firsts, cache = self._prefill_admits(cache, admits)
+                    firsts, cache = self._prefill_admits(cache, admits,
+                                                         sched, bt)
                     now = clock() - t0
+                    peak_running = max(peak_running, len(sched.running))
                     for (slot, req), first in zip(admits, firsts):
                         req.first_token_s = now
                         req.tokens.append(first)
                         if first == self.eos_id or req.max_new <= 1:
                             sched.retire(slot, now)
+                            if self.paged:
+                                bt[slot, :] = -1
                             continue
                         tok[slot, 0] = first
                         pos[slot, 0] = len(req.prompt)
@@ -254,7 +381,16 @@ class Server:
                 if wait > 0:
                     time.sleep(min(wait, 0.005))
                 continue
-            new_tok, cache = ex.decode(tok, pos, act, cache)
+            if self.paged:
+                # alloc-on-demand: the block that will hold this step's
+                # write must exist before the step runs (reserved at
+                # admission, so the alloc cannot fail)
+                for slot, req in sched.running.items():
+                    li = int(pos[slot, 0]) // self.block_size
+                    if bt[slot, li] < 0:
+                        bt[slot, li] = sched.blocks.alloc(
+                            req.rid, shard=self._block_pref(slot))
+            new_tok, cache = ex.decode(tok, pos, act, cache, block_table=bt)
             new_tok = np.asarray(new_tok)
             steps += 1
             now = clock() - t0
@@ -266,6 +402,8 @@ class Server:
                 if t == self.eos_id or len(req.tokens) >= req.max_new:
                     act[slot] = False
                     sched.retire(slot, now)
+                    if self.paged:
+                        bt[slot, :] = -1
                 else:
                     tok[slot, 0] = t
         wall = clock() - t0
@@ -274,6 +412,16 @@ class Server:
         stats["decode_steps"] = steps
         stats["decode_compiles"] = self.decode_cache_size()
         stats["slot_shards"] = ex.n_slot_shards
+        stats["cache_layout"] = "paged" if self.paged else "dense"
+        stats["cache_bytes"] = self.cache_bytes
+        stats["peak_concurrency"] = peak_running
+        if self.paged:
+            stats["block_size"] = self.block_size
+            stats["n_blocks"] = ex.n_blocks
+            stats["peak_blocks_in_use"] = blocks.high_watermark
+            stats["block_util_pct"] = round(
+                100.0 * blocks.high_watermark / max(ex.n_blocks, 1), 1)
+            stats["blocks_free_end"] = blocks.free_count
         return sched.finished, stats
 
     def decode_cache_size(self) -> int:
@@ -284,6 +432,12 @@ def build_server(args) -> Tuple[Server, object]:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
+    cfg = dataclasses.replace(
+        cfg,
+        cache_layout=getattr(args, "cache_layout", "auto") or "auto",
+        cache_block_size=int(getattr(args, "block_size", 0)
+                             or cfg.cache_block_size))
+    cfg.resolved_cache_layout        # validate the layout/family combo early
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     policy = parse_policy(getattr(args, "quant_policy", None))
@@ -304,9 +458,16 @@ def build_server(args) -> Tuple[Server, object]:
     longest = args.prompt_len + args.prompt_jitter
     prompt_pad = -(-longest // PREFILL_BUCKET) * PREFILL_BUCKET
     mesh = parse_mesh_spec(getattr(args, "mesh", None))
-    server = Server(cfg, params, max_batch=args.max_batch,
-                    max_seq=prompt_pad + args.max_new + 8,
-                    eos_id=args.eos_id, mesh=mesh)
+    # Round the cache extent to the block grid for EVERY layout: a paged
+    # Server rounds anyway, and giving dense the same extent keeps the two
+    # layouts' attention shapes — and therefore their greedy tokens —
+    # bit-identical for the serve_bench cross-layout assertion.
+    max_seq = prompt_pad + args.max_new + 8
+    bsz = cfg.cache_block_size
+    max_seq = -(-max_seq // bsz) * bsz
+    server = Server(cfg, params, max_batch=args.max_batch, max_seq=max_seq,
+                    eos_id=args.eos_id, mesh=mesh,
+                    n_blocks=getattr(args, "cache_blocks", None))
     return server, cfg
 
 
@@ -347,6 +508,21 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--prompt-jitter", type=int, default=0,
                     help="+- this many tokens of per-request prompt-length "
                          "variation (exercises heterogeneous admission)")
+    ap.add_argument("--cache-layout", default="auto",
+                    choices=["auto", "dense", "paged"],
+                    help="decode-cache layout (DESIGN.md §3): paged = block "
+                         "pool + per-slot block tables (default for "
+                         "full-attention families); dense = per-slot slabs "
+                         "(required for SSM/hybrid/SWA/encdec state)")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="positions per paged cache block (0 = config "
+                         "default, 16)")
+    ap.add_argument("--cache-blocks", type=int, default=None,
+                    help="usable pool blocks for --cache-layout paged "
+                         "(default: dense-equivalent capacity, "
+                         "max_batch * ceil(max_seq / block_size); smaller "
+                         "values trade capacity for memory and gate "
+                         "admission on block availability)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="-1 disables EOS retirement")
     ap.add_argument("--seed", type=int, default=0)
@@ -369,6 +545,10 @@ def main():
     for mode in modes:
         trace = trace_from_args(args, cfg)
         done, stats = server.serve(trace, continuous=(mode == "continuous"))
+        cache_info = f"cache {stats['cache_layout']}"
+        if stats["cache_layout"] == "paged":
+            cache_info += (f" ({stats['n_blocks']}x{stats['block_size']} "
+                           f"blocks, peak util {stats['block_util_pct']}%)")
         print(f"[{mode}] served {stats['n_requests']} requests: "
               f"{stats['tokens']} tokens in {stats['wall_s']:.3f}s = "
               f"{stats['tok_per_s']:.1f} tok/s | "
@@ -376,7 +556,7 @@ def main():
               f"p99 {stats['p99_latency_s'] * 1e3:.0f}ms | "
               f"ttft p50 {stats['p50_ttft_s'] * 1e3:.0f}ms | "
               f"decode compiles {stats['decode_compiles']} | "
-              f"slot shards {stats['slot_shards']}")
+              f"slot shards {stats['slot_shards']} | {cache_info}")
         for r in done[:2]:
             print(f"  req {r.rid}: slot {r.slot}, {len(r.tokens)} tokens, "
                   f"{r.out[:10].tolist()}...")

@@ -229,6 +229,102 @@ def decode_attention_block(p, x, cfg, positions, cache, active=None,
     return y, new_cache
 
 
+def paged_decode_attention_block(p, x, cfg, positions, cache, block_tables,
+                                 active=None, constrain=None):
+    """Single-token decode against a paged block pool (DESIGN.md §3).
+
+    cache: {"k","v": (N, bs, Hkv, D)} block pools (plus per-entry
+    "k_scale"/"v_scale" (N, bs, Hkv, 1) under cfg.kv_quant == "int8"),
+    where ``N = n_blocks + max_batch`` — the last ``max_batch`` blocks are
+    per-slot scratch.  ``block_tables`` is (B, n_bt) int32, -1 =
+    unallocated; the host guarantees the block holding position ``pos`` is
+    allocated (and unique to this slot) before the step runs.
+
+    The new token's KV is scattered to (block_tables[b, pos//bs], pos%bs);
+    inactive or table-less slots write to their own scratch block instead
+    (distinct destinations, so the masked-decode contract needs no
+    read-modify-write).  The read side gathers each slot's blocks back into
+    a (B, n_bt*bs, ...) view and *synthesizes* key positions from the
+    table (logical block j, offset o -> j*bs + o; unallocated -> -1), so
+    stale pool contents past ``pos`` are causally masked — no stored k_pos.
+    """
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    pos1d = positions[:, 0] if positions.ndim == 3 else positions   # (B,1)
+    B = x.shape[0]
+    N, bs = cache["k"].shape[0], cache["k"].shape[1]
+    n_bt = block_tables.shape[1]
+    pos = pos1d[:, 0]                                               # (B,)
+    li = jnp.clip(pos // bs, 0, n_bt - 1)
+    off = pos % bs
+    pb = jnp.take_along_axis(block_tables, li[:, None], axis=1)[:, 0]
+    ok = pb >= 0
+    if active is not None:
+        ok = ok & active
+    dest = jnp.where(ok, pb, N - B + jnp.arange(B, dtype=pb.dtype))
+
+    if "k_scale" in cache:
+        kq, ks = _kv_quantize(k_new[:, 0])
+        vq, vs = _kv_quantize(v_new[:, 0])
+        new_cache = {
+            "k": cache["k"].at[dest, off].set(kq),
+            "v": cache["v"].at[dest, off].set(vq),
+            "k_scale": cache["k_scale"].at[dest, off].set(ks),
+            "v_scale": cache["v_scale"].at[dest, off].set(vs),
+        }
+    else:
+        new_cache = {
+            "k": cache["k"].at[dest, off].set(k_new[:, 0].astype(
+                cache["k"].dtype)),
+            "v": cache["v"].at[dest, off].set(v_new[:, 0].astype(
+                cache["v"].dtype)),
+        }
+    if constrain is not None:
+        new_cache = constrain(new_cache)
+
+    safe = jnp.maximum(block_tables, 0)                             # (B,n_bt)
+
+    def gather(pool):
+        g = pool[safe]                       # (B, n_bt, bs, Hkv, ·)
+        return g.reshape(B, n_bt * bs, *pool.shape[2:])
+
+    if "k_scale" in new_cache:
+        k = _kv_dequantize(gather(new_cache["k"]),
+                           gather(new_cache["k_scale"]), x.dtype)
+        v = _kv_dequantize(gather(new_cache["v"]),
+                           gather(new_cache["v_scale"]), x.dtype)
+    else:
+        k, v = gather(new_cache["k"]), gather(new_cache["v"])
+    base = (jnp.arange(n_bt, dtype=jnp.int32)[None, :, None] * bs
+            + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
+    k_pos = jnp.where(block_tables[:, :, None] >= 0, base,
+                      -1).reshape(B, n_bt * bs)
+    # full attention only: a bounded block table cannot represent a
+    # wrapping SWA ring (configs.paged_capable forbids the combination)
+    assert cfg.attn_type == "full", cfg.attn_type
+    o = sdpa(q, k, v, pos1d, k_pos, causal=True, window=0)
+    y = linear(p["wo"], o.reshape(B, 1, -1), cfg.quant_mode)
+    return y, new_cache
+
+
+def init_paged_kv_cache(cfg, n_total, block_size, dtype=jnp.bfloat16):
+    """Block-pool KV storage for one attention layer: ``n_total`` blocks of
+    ``block_size`` positions each (``n_total = n_blocks + max_batch``; the
+    tail blocks are per-slot scratch).  No ``k_pos`` leaf — key positions
+    are synthesized from the block table at read time."""
+    hd, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    if cfg.kv_quant == "int8":
+        return {
+            "k": jnp.zeros((n_total, block_size, hkv, hd), jnp.int8),
+            "v": jnp.zeros((n_total, block_size, hkv, hd), jnp.int8),
+            "k_scale": jnp.zeros((n_total, block_size, hkv, 1), jnp.float32),
+            "v_scale": jnp.zeros((n_total, block_size, hkv, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((n_total, block_size, hkv, hd), dtype),
+        "v": jnp.zeros((n_total, block_size, hkv, hd), dtype),
+    }
+
+
 def init_kv_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
     """Cache extent: full seq for dense attention, window for SWA/local
     (bounded state is what qualifies an arch for long_500k; DESIGN.md §4)."""

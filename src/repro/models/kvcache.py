@@ -1,0 +1,96 @@
+"""Typed decode-cache pytree: one ``KVCache`` object from the attention
+kernel to the scheduler (DESIGN.md §3).
+
+Two storage layouts, selected by the static ``layout`` metadata (the
+analogue of ``QuantizedTensor``'s format field — consumers dispatch on the
+*object*, never on dict-key sniffing):
+
+* ``dense``  — the slot cache: every leaf carries the slot dim, each slot
+  owns a fixed ``(max_seq, ...)`` extent (ring-buffered for SWA).  Required
+  for recurrent/SSM state, SWA rings, and encoder-decoder caches.
+* ``paged``  — attention KV lives in a pool of fixed-size blocks
+  ``(n_blocks + scratch, block_size, Hkv, head_dim)`` per layer, indexed
+  through per-slot **block tables** (a ``(max_batch, n_bt)`` int32 decode
+  input; ``-1`` = unallocated).  Blocks are allocated on demand by the
+  scheduler's host-side ``BlockAllocator`` and freed at retirement, so the
+  admissible batch is bounded by *actual* tokens, not worst-case sequence
+  length.
+
+Pool layout invariants (shared by attention/transformer/executor/serve):
+
+* the pool's leading dim is ``n_blocks + max_batch``: the last ``max_batch``
+  blocks are per-slot *scratch* — decode writes of inactive/unallocated
+  slots land there (distinct per slot, so the masked-decode scatter never
+  has duplicate destinations among live data);
+* a physical block is owned by at most one request at a time (allocator
+  invariant), so concurrent per-slot writes never collide;
+* there is no stored ``k_pos`` leaf: key positions are *synthesized* from
+  the block table (logical block ``j``, offset ``o`` ⇒ position
+  ``j*block_size + o``; unallocated ⇒ ``-1``).  Stale pool contents are
+  invisible because decode writes position ``p`` before attending at
+  ``q_pos = p`` — every reachable key slot is either freshly written or
+  masked by causality.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+DENSE = "dense"
+PAGED = "paged"
+LAYOUTS = (DENSE, PAGED)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class KVCache:
+    """The serving decode cache as a registered pytree.
+
+    Children: ``kv`` (the per-layer stack tree — dense leaves or block
+    pools) and ``enc_out`` (whisper's encoder output, dense only).  Static
+    aux: ``layout``, ``block_size``, ``n_blocks`` (usable pool blocks,
+    excluding the per-slot scratch tail) — so layout survives jit,
+    eval_shape, device_put, and donation unchanged, and every consumer
+    dispatches on ``cache.layout`` instead of guessing from shapes.
+    """
+    kv: Any
+    enc_out: Optional[Any] = None
+    layout: str = DENSE
+    block_size: int = 0
+    n_blocks: int = 0
+
+    def tree_flatten(self):
+        return ((self.kv, self.enc_out),
+                (self.layout, self.block_size, self.n_blocks))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kv, enc_out = children
+        layout, block_size, n_blocks = aux
+        return cls(kv, enc_out, layout, block_size, n_blocks)
+
+    @property
+    def paged(self) -> bool:
+        return self.layout == PAGED
+
+    def replace(self, **kw) -> "KVCache":
+        return dataclasses.replace(self, **kw)
+
+
+def blocks_for(n_positions: int, block_size: int) -> int:
+    """Blocks needed to hold ``n_positions`` cache rows (ceil division)."""
+    return -(-int(n_positions) // int(block_size))
+
+
+def table_width(max_seq: int, block_size: int) -> int:
+    """Block-table width ``n_bt``: logical blocks covering ``max_seq``."""
+    return blocks_for(max_seq, block_size)
+
+
+def cache_nbytes(cache) -> int:
+    """Total cache bytes (works on arrays and ShapeDtypeStructs alike)."""
+    return int(sum(int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree_util.tree_leaves(cache)))

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quantizer
-from repro.models import attention, layers, transformer
+from repro.models import attention, kvcache as kvc, layers, transformer
+from repro.models.kvcache import KVCache
 from repro.quant import embed, linear, tied_logits
 from repro.runtime import sharding as shr
 
@@ -143,17 +144,33 @@ class Model:
         return total, {"ce": ce, "aux": aux}
 
     # ---------------------------------------------------------------- serving
-    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16, mesh=None):
-        """Batched decode cache.  With ``mesh`` (threaded in by the
-        Executor — its only cache-construction path), every leaf is
-        committed to its serving sharding — slot dim over the data axes,
-        heads/state channels over "model" (DESIGN.md §5).  ``mesh=None``
-        (direct model use, eval_shape) skips placement."""
+    def init_cache(self, batch, seq_len, dtype=jnp.bfloat16, mesh=None,
+                   layout=None, block_size=None, n_blocks=None) -> KVCache:
+        """Batched decode cache as a typed :class:`KVCache` (DESIGN.md §3).
+
+        ``layout`` defaults to ``cfg.resolved_cache_layout``: "dense" builds
+        the classic per-slot slab; "paged" builds per-layer block pools of
+        ``n_blocks`` usable blocks (default: dense-equivalent capacity,
+        ``batch * ceil(seq_len / block_size)``) plus ``batch`` per-slot
+        scratch blocks.  With ``mesh`` (threaded in by the Executor — its
+        only cache-construction path), every leaf is committed to its
+        serving sharding — slot/pool dim over the data axes, heads/state
+        channels over "model" (DESIGN.md §5).  ``mesh=None`` (direct model
+        use, eval_shape) skips placement."""
         cfg = self.cfg
-        cache = {"kv": transformer.init_stack_cache(cfg, batch, seq_len, dtype)}
-        if cfg.family == "encdec":
-            cache["enc_out"] = jnp.zeros((batch, cfg.enc_frames, cfg.d_model),
-                                         dtype)
+        layout = layout or cfg.resolved_cache_layout
+        if layout == kvc.PAGED:
+            bs = block_size or cfg.cache_block_size
+            nb = (n_blocks if n_blocks is not None
+                  else batch * kvc.blocks_for(seq_len, bs))
+            kv = transformer.init_paged_stack_cache(cfg, nb + batch, bs,
+                                                    dtype)
+            cache = KVCache(kv, None, kvc.PAGED, bs, nb)
+        else:
+            kv = transformer.init_stack_cache(cfg, batch, seq_len, dtype)
+            enc_out = (jnp.zeros((batch, cfg.enc_frames, cfg.d_model), dtype)
+                       if cfg.family == "encdec" else None)
+            cache = KVCache(kv, enc_out)
         if mesh is not None:
             cache = jax.device_put(cache, shr.to_shardings(
                 shr.cache_specs(cfg, mesh, cache), mesh))
@@ -161,6 +178,11 @@ class Model:
 
     def prefill(self, params, batch, cache_len=None, true_lens=None):
         """Forward the prompt, return (last-token logits, decode cache).
+
+        The returned :class:`KVCache` is always DENSE layout — a
+        per-sequence cache in position order.  Under the paged engine the
+        executor prefills at the bucketed length and ``insert_cache``
+        scatters these rows into the allocated pool blocks (DESIGN.md §3).
 
         ``true_lens`` (B,) int32 supports right-padded prompts (the serving
         engine's bucketed prefill, DESIGN.md §3): last-token logits are
@@ -175,22 +197,24 @@ class Model:
         cache_len = cache_len or S
         logits, states, _, enc_out = self.forward(params, batch,
                                                   collect_cache=True)
-        cache = {"kv": _states_to_cache(cfg, states, S, cache_len)}
-        if cfg.family == "encdec":
-            cache["enc_out"] = enc_out
+        kv = _states_to_cache(cfg, states, S, cache_len)
+        enc = enc_out if cfg.family == "encdec" else None
         if true_lens is None:
-            return logits[:, -1], cache
+            return logits[:, -1], KVCache(kv, enc)
         B = logits.shape[0]
         last = logits[jnp.arange(B), true_lens - 1]
-        cache["kv"] = _mask_padded_kv(cache["kv"], true_lens)
-        return last, cache
+        return last, KVCache(_mask_padded_kv(kv, true_lens), enc)
 
-    def decode_step(self, params, batch, cache, mesh=None):
+    def decode_step(self, params, batch, cache: KVCache, mesh=None):
         """batch: {"token": (B,1), "pos": (B,1) or "positions": (B,3,1),
-        optional "active": (B,) bool}.  Rows with ``active`` False compute a
+        optional "active": (B,) bool, "block_table": (B, n_bt) int32 when
+        ``cache.layout == "paged"``}.  Rows with ``active`` False compute a
         throwaway logit but leave their cache/state rows untouched — the
         masked-decode contract that lets the continuous-batching engine keep
-        the jitted step shape-stable over free slots (DESIGN.md §3).
+        the jitted step shape-stable over free slots (DESIGN.md §3).  The
+        cache layout is dispatched on the typed cache itself, so a dense
+        cache (e.g. straight from ``prefill``) decodes dense regardless of
+        the config's serving default.
 
         ``mesh`` (threaded in by the Executor) pins every masked cache write
         to its serving sharding via a block-level constraint inside the
@@ -203,39 +227,55 @@ class Model:
         if cfg.rope == "sinusoidal":
             x = x + layers.sinusoidal_from_positions(
                 positions, cfg.d_model, jnp.dtype(cfg.dtype))
+        bt = batch.get("block_table") if cache.paged else None
+        if cache.paged and bt is None:
+            raise ValueError('paged decode needs batch["block_table"] '
+                             "(B, n_bt) int32, -1 = unallocated")
         constrain = None
         if mesh is not None and mesh.size > 1:
-            constrain = functools.partial(shr.constrain_block_cache, cfg, mesh)
-        enc_out = cache.get("enc_out")
+            constrain = functools.partial(shr.constrain_block_cache, cfg,
+                                          mesh, paged=cache.paged)
+        enc_out = cache.enc_out
         x, new_kv = transformer.apply_decoder_stack_decode(
-            params["stack"], x, cfg, positions, cache["kv"], enc_kv=enc_out,
-            active=batch.get("active"), constrain=constrain)
+            params["stack"], x, cfg, positions, cache.kv, enc_kv=enc_out,
+            active=batch.get("active"), constrain=constrain,
+            block_tables=bt)
         x = layers.apply_norm(params["norm_f"], x, cfg)
         logits = self._logits(params, x)
-        new_cache = dict(cache)
-        new_cache["kv"] = new_kv
-        return logits[:, 0], new_cache
+        return logits[:, 0], cache.replace(kv=new_kv)
 
-    def slice_cache(self, cache, row):
-        """Batch row ``row`` of a batched cache as a batch-1 cache (the
-        counterpart of ``insert_cache`` for splitting batched prefills)."""
-        out = {"kv": transformer.slice_stack_cache(cache["kv"], row)}
-        if "enc_out" in cache:
-            out["enc_out"] = jax.lax.dynamic_slice_in_dim(
-                cache["enc_out"], row, 1, axis=0)
-        return out
+    def slice_cache(self, cache: KVCache, row) -> KVCache:
+        """Batch row ``row`` of a batched DENSE cache as a batch-1 cache
+        (the counterpart of ``insert_cache`` for splitting batched
+        prefills; the burst path slices the dense prefill output even when
+        the engine cache is paged)."""
+        if cache.paged:
+            raise ValueError("slice_cache slices per-slot rows; a paged "
+                             "cache has no slot rows to slice")
+        kv = transformer.slice_stack_cache(cache.kv, row)
+        enc = (None if cache.enc_out is None else
+               jax.lax.dynamic_slice_in_dim(cache.enc_out, row, 1, axis=0))
+        return cache.replace(kv=kv, enc_out=enc)
 
-    def insert_cache(self, cache, seq_cache, slot):
-        """Admit one prefilled sequence (batch-1 ``seq_cache``) into row
-        ``slot`` of the engine's batched decode cache (DESIGN.md §3).
-        ``slot`` may be traced, so one jitted insertion covers all slots."""
-        new_cache = dict(cache)
-        new_cache["kv"] = transformer.insert_stack_cache(
-            cache["kv"], seq_cache["kv"], slot)
-        if "enc_out" in cache:
-            new_cache["enc_out"] = cache["enc_out"].at[slot].set(
-                seq_cache["enc_out"][0].astype(cache["enc_out"].dtype))
-        return new_cache
+    def insert_cache(self, cache: KVCache, seq_cache: KVCache, slot,
+                     block_row=None) -> KVCache:
+        """Admit one prefilled sequence (batch-1 dense ``seq_cache``) into
+        the engine cache (DESIGN.md §3): dense writes row ``slot`` across
+        every leaf; paged scatters the sequence's rows into the pool blocks
+        named by ``block_row`` (n_bt,) int32 (-1 tail entries route to the
+        slot's scratch block).  ``slot`` / ``block_row`` may be traced, so
+        one jitted insertion covers all slots/tables."""
+        if cache.paged:
+            if block_row is None:
+                raise ValueError("paged insert_cache needs block_row")
+            kv = transformer.insert_paged_stack_cache(
+                cache.kv, seq_cache.kv, block_row, cache.n_blocks + slot)
+            return cache.replace(kv=kv)
+        kv = transformer.insert_stack_cache(cache.kv, seq_cache.kv, slot)
+        enc = cache.enc_out
+        if enc is not None:
+            enc = enc.at[slot].set(seq_cache.enc_out[0].astype(enc.dtype))
+        return cache.replace(kv=kv, enc_out=enc)
 
 
 def _ring_layout(arr, S, C):

@@ -90,17 +90,25 @@ def _freeze_inactive_state(new_state, old_state, active):
 
 
 def apply_block_decode(p, x, cfg, kind, positions, cache, enc_kv=None,
-                       active=None, constrain=None):
+                       active=None, constrain=None, block_tables=None):
     """One-token decode block.  Returns (x, new_cache).  ``active`` (B,) bool
     masks cache/state mutation per batch row (None = all rows live).
     ``constrain`` (executor-threaded, DESIGN.md §5) re-pins the block's
-    updated cache to its serving sharding after the masked writes."""
+    updated cache to its serving sharding after the masked writes.
+    ``block_tables`` (B, n_bt) selects the paged attention path — the block
+    cache is then a pool dict (DESIGN.md §3); only pure-attention stacks
+    resolve to the paged layout (configs.ModelConfig.paged_capable)."""
     h = layers.apply_norm(p["norm1"], x, cfg)
     if kind in ("attn", "xattn"):
-        y, cache = attention.decode_attention_block(p["attn"], h, cfg,
-                                                    positions, cache,
-                                                    active=active,
-                                                    constrain=constrain)
+        if block_tables is not None:
+            y, cache = attention.paged_decode_attention_block(
+                p["attn"], h, cfg, positions, cache, block_tables,
+                active=active, constrain=constrain)
+        else:
+            y, cache = attention.decode_attention_block(p["attn"], h, cfg,
+                                                        positions, cache,
+                                                        active=active,
+                                                        constrain=constrain)
         x = x + y
         if kind == "xattn":
             hx = layers.apply_norm(p["norm_x"], x, cfg)
@@ -229,12 +237,16 @@ def apply_decoder_stack(p, x, cfg, positions, enc_kv=None, collect_cache=False):
 
 
 def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None,
-                               active=None, constrain=None):
+                               active=None, constrain=None,
+                               block_tables=None):
     """cache = (group_cache_stacked, tail_cache_list) as produced by
-    ``init_stack_cache``.  ``active`` (B,) bool gates cache writes per row
-    (continuous batching; DESIGN.md §3).  ``constrain`` (executor-threaded)
-    pins each block's updated cache to its serving sharding inside the scan
-    (DESIGN.md §5).  Returns (x, new_cache)."""
+    ``init_stack_cache`` (dense) or ``init_paged_stack_cache`` (paged —
+    selected by passing ``block_tables``; the table is scan-invariant, every
+    layer indexes its own pool through the same per-slot block ids).
+    ``active`` (B,) bool gates cache writes per row (continuous batching;
+    DESIGN.md §3).  ``constrain`` (executor-threaded) pins each block's
+    updated cache to its serving sharding inside the scan (DESIGN.md §5).
+    Returns (x, new_cache)."""
     group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
     g_cache, t_cache = cache
 
@@ -244,7 +256,8 @@ def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None,
         for i, kind in enumerate(group_kinds):
             x, nc = apply_block_decode(gp[f"b{i}_{kind}"], x, cfg, kind,
                                        positions, gc[f"b{i}"], enc_kv,
-                                       active=active, constrain=constrain)
+                                       active=active, constrain=constrain,
+                                       block_tables=block_tables)
             new_c[f"b{i}"] = nc
         return x, new_c
 
@@ -252,7 +265,8 @@ def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None,
     new_t = []
     for tp, kind, tc in zip(p["tail"], tail_kinds, t_cache):
         x, nc = apply_block_decode(tp, x, cfg, kind, positions, tc, enc_kv,
-                                   active=active, constrain=constrain)
+                                   active=active, constrain=constrain,
+                                   block_tables=block_tables)
         new_t.append(nc)
     return x, (new_g_cache, new_t)
 
@@ -272,6 +286,62 @@ def init_stack_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
         lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), g)
     t = [one(kind) for kind in tail_kinds]
     return (g, t)
+
+
+def init_paged_stack_cache(cfg, n_total, block_size, dtype=jnp.bfloat16):
+    """Per-layer block pools in the same (grouped, tail) stack structure as
+    ``init_stack_cache``.  Only pure full-attention stacks are pageable
+    (``cfg.paged_capable`` — enforced at layout resolution), so every group
+    slot is an attention pool and the tail is empty."""
+    group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
+    assert all(k == "attn" for k in group_kinds) and not tail_kinds, (
+        f"paged cache needs a pure attention stack, got {group_kinds} + "
+        f"{tail_kinds}")
+    g = {f"b{i}": attention.init_paged_kv_cache(cfg, n_total, block_size,
+                                                dtype)
+         for i in range(len(group_kinds))}
+    g = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), g)
+    return (g, [])
+
+
+def insert_paged_stack_cache(cache, seq_cache, block_row, scratch_block):
+    """Scatter one prefilled sequence into its allocated pool blocks.
+
+    ``seq_cache`` is the batch-1 DENSE cache returned by ``Model.prefill``
+    at ``cache_len == the prefill length`` (rows [0, C) hold the sequence in
+    position order — the ring layout is the identity below the extent);
+    ``cache`` is the engine's paged stack.  ``block_row`` (n_bt,) int32
+    names the physical block for each logical block; entries past the
+    request's own allocation are -1 and their (pad-only) rows are routed to
+    ``scratch_block`` — that single destination may repeat, which is fine
+    because scratch contents are never read.  ``block_row`` and
+    ``scratch_block`` may be traced, so one jitted insertion serves every
+    slot/table without recompiling.
+    """
+    g_cache, _ = cache
+    sg_cache, _ = seq_cache
+
+    def scatter(pool, seq):
+        # pool (G, N, bs, ...), seq (G, 1, C, ...)
+        bs = pool.shape[2]
+        C = seq.shape[2]
+        nb = -(-C // bs)
+        rows = seq[:, 0]
+        if nb * bs != C:
+            pad = [(0, 0), (0, nb * bs - C)] + [(0, 0)] * (rows.ndim - 2)
+            rows = jnp.pad(rows, pad)
+        rows = rows.reshape(rows.shape[0], nb, bs, *rows.shape[2:])
+        ids = jax.lax.dynamic_slice_in_dim(block_row, 0, nb)
+        dest = jnp.where(ids >= 0, ids, scratch_block)
+        return pool.at[:, dest].set(rows.astype(pool.dtype))
+
+    new_g = {}
+    for name, pool_dict in g_cache.items():
+        seq_dict = sg_cache[name]
+        new_g[name] = {k: scatter(pool, seq_dict[k])
+                       for k, pool in pool_dict.items()}
+    return (new_g, [])
 
 
 def slice_stack_cache(cache, row):

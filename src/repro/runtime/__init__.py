@@ -1,6 +1,6 @@
 from repro.runtime.sharding import (  # noqa: F401
     param_specs, batch_specs, cache_specs, block_cache_specs,
-    serve_batch_specs, batch_shard_count, slot_shard_map,
+    serve_batch_specs, batch_shard_count, slot_shard_map, block_shard_map,
     FSDP_AXIS, DP_AXES,
 )
 from repro.runtime.executor import Executor, single_device_mesh  # noqa: F401

@@ -33,6 +33,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.models import kvcache as kvc
 from repro.runtime import sharding as shr
 from repro.runtime.elastic import make_mesh_from_plan, plan_remesh
 from repro.runtime.straggler import StragglerMonitor
@@ -50,7 +51,7 @@ class Executor:
     """Owns mesh, placement, and the compiled serving entry points."""
 
     def __init__(self, cfg, params, *, max_batch: int, max_seq: int,
-                 mesh=None, model=None):
+                 mesh=None, model=None, n_blocks: int = None):
         if model is None:
             from repro.models import build_model   # lazy: models imports us
             model = build_model(cfg)
@@ -61,13 +62,31 @@ class Executor:
         self.mesh = mesh if mesh is not None else single_device_mesh()
         self.dtype = jnp.dtype(cfg.dtype)
 
+        # ---- cache layout (DESIGN.md §3): dense slot slabs or a paged
+        # block pool driven by host-side block tables ----
+        self.layout = cfg.resolved_cache_layout
+        self.paged = self.layout == kvc.PAGED
+        self.block_size = cfg.cache_block_size if self.paged else 0
+        if self.paged:
+            # logical blocks a slot can address; the pool adds max_batch
+            # scratch blocks for masked/inactive writes
+            self.n_bt = kvc.table_width(max_seq, self.block_size)
+            self.n_blocks = (n_blocks if n_blocks is not None
+                             else max_batch * self.n_bt)
+        else:
+            self.n_bt = 0
+            self.n_blocks = 0
+            if n_blocks is not None:
+                raise ValueError("n_blocks only applies to the paged cache "
+                                 "layout (cfg.resolved_cache_layout)")
+
         # ---- placement: params now, cache/input shardings precomputed ----
         self.param_shardings = shr.to_shardings(
             shr.param_specs(params, cfg, self.mesh, mode="serve"), self.mesh)
         self.params = jax.device_put(params, self.param_shardings)
 
         cache_shape = jax.eval_shape(
-            lambda: model.init_cache(max_batch, max_seq, dtype=self.dtype))
+            lambda: self._init_cache_fn())
         self.cache_shardings = shr.to_shardings(
             shr.cache_specs(cfg, self.mesh, cache_shape), self.mesh)
 
@@ -76,12 +95,24 @@ class Executor:
             "pos": jax.ShapeDtypeStruct((max_batch, 1), jnp.int32),
             "active": jax.ShapeDtypeStruct((max_batch,), jnp.bool_),
         }
+        if self.paged:
+            step_inputs["block_table"] = jax.ShapeDtypeStruct(
+                (max_batch, self.n_bt), jnp.int32)
         self._step_shardings = shr.to_shardings(
             shr.serve_batch_specs(cfg, self.mesh, step_inputs), self.mesh)
 
-        # ---- slot partitioning for the mesh-aware scheduler ----
+        # ---- slot/block partitioning for the mesh-aware scheduler ----
         self.n_slot_shards = shr.batch_shard_count(cfg, self.mesh, max_batch)
         self.slot_shards = shr.slot_shard_map(cfg, self.mesh, max_batch)
+        if self.paged:
+            n_total = self.n_blocks + max_batch
+            self.n_block_shards = shr.batch_shard_count(cfg, self.mesh,
+                                                        n_total)
+            self.block_shards = shr.block_shard_map(cfg, self.mesh, n_total,
+                                                    self.n_blocks)
+        else:
+            self.n_block_shards = 1
+            self.block_shards = None
         dp_extent = int(np.prod([self.mesh.shape[a] for a in shr.DP_AXES
                                  if a in self.mesh.axis_names] or [1]))
         if self.n_slot_shards < dp_extent:
@@ -105,15 +136,29 @@ class Executor:
         tok_sh = jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec())
         self._prefill = jax.jit(self._prefill_fn)
-        self._decode = jax.jit(self._decode_fn, donate_argnums=(4,),
-                               out_shardings=(tok_sh, self.cache_shardings))
-        self._prefill_insert = jax.jit(self._prefill_insert_fn,
-                                       donate_argnums=(3,),
-                                       out_shardings=(tok_sh,
-                                                      self.cache_shardings))
-        self._insert_burst = jax.jit(self._insert_burst_fn,
-                                     donate_argnums=(0,),
-                                     out_shardings=self.cache_shardings)
+        if self.paged:
+            # paged signatures carry the host-managed block-table tensors;
+            # the donation + out_shardings contracts are identical, so the
+            # decode step still compiles exactly once per mesh
+            self._decode = jax.jit(
+                self._decode_fn_paged, donate_argnums=(5,),
+                out_shardings=(tok_sh, self.cache_shardings))
+            self._prefill_insert = jax.jit(
+                self._prefill_insert_fn_paged, donate_argnums=(3,),
+                out_shardings=(tok_sh, self.cache_shardings))
+            self._insert_burst = jax.jit(
+                self._insert_burst_fn_paged, donate_argnums=(0,),
+                out_shardings=self.cache_shardings)
+        else:
+            self._decode = jax.jit(
+                self._decode_fn, donate_argnums=(4,),
+                out_shardings=(tok_sh, self.cache_shardings))
+            self._prefill_insert = jax.jit(
+                self._prefill_insert_fn, donate_argnums=(3,),
+                out_shardings=(tok_sh, self.cache_shardings))
+            self._insert_burst = jax.jit(
+                self._insert_burst_fn, donate_argnums=(0,),
+                out_shardings=self.cache_shardings)
 
         # ---- elastic / straggler: no-op on a single-process mesh ----
         self.monitor = (StragglerMonitor(n_hosts=jax.process_count())
@@ -165,7 +210,11 @@ class Executor:
 
     # ------------------------------------------------------------ jitted fns
     def _prefill_fn(self, params, tokens, true_lens):
-        """(B, Sb) right-padded prompts -> (first greedy token (B,), cache)."""
+        """(B, Sb) right-padded prompts -> (first greedy token (B,), cache).
+
+        The per-sequence cache is always dense layout; paged executors
+        prefill at the bucketed extent (the rows the insert scatters into
+        pool blocks), dense executors at ``max_seq`` (the slot extent)."""
         B, S = tokens.shape
         batch = {"tokens": tokens}
         if self.cfg.rope == "mrope":
@@ -174,14 +223,29 @@ class Executor:
         if self.cfg.family == "encdec":
             batch["frames"] = jnp.zeros(
                 (B, self.cfg.enc_frames, self.cfg.d_model), self.dtype)
-        logits, cache = self.model.prefill(params, batch,
-                                           cache_len=self.max_seq,
-                                           true_lens=true_lens)
+        logits, cache = self.model.prefill(
+            params, batch, cache_len=(None if self.paged else self.max_seq),
+            true_lens=true_lens)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
     def _decode_fn(self, params, token, pos, active, cache):
         """One masked decode step over all slots; greedy next token (B,)."""
         batch = {"token": token, "pos": pos, "active": active}
+        if self.cfg.rope == "mrope":
+            batch["positions"] = jnp.broadcast_to(
+                pos[:, None, :], (pos.shape[0], 3, 1))
+        logits, cache = self.model.decode_step(params, batch, cache,
+                                               mesh=self.mesh)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _decode_fn_paged(self, params, token, pos, active, block_table,
+                         cache):
+        """Paged twin of ``_decode_fn``: the (B, n_bt) block table is a
+        decode-step INPUT (host-allocated, DESIGN.md §3), not cache state —
+        so the donated cache tree and its pinned out_shardings are
+        unchanged step-to-step and the step compiles exactly once."""
+        batch = {"token": token, "pos": pos, "active": active,
+                 "block_table": block_table}
         if self.cfg.rope == "mrope":
             batch["positions"] = jnp.broadcast_to(
                 pos[:, None, :], (pos.shape[0], 3, 1))
@@ -195,6 +259,12 @@ class Executor:
         first, seq_cache = self._prefill_fn(params, tokens, true_lens)
         return first, self.model.insert_cache(cache, seq_cache, slot)
 
+    def _prefill_insert_fn_paged(self, params, tokens, true_lens, cache,
+                                 slot, block_row):
+        first, seq_cache = self._prefill_fn(params, tokens, true_lens)
+        return first, self.model.insert_cache(cache, seq_cache, slot,
+                                              block_row=block_row)
+
     def _insert_burst_fn(self, cache, seq_cache, slots, valid):
         """Insert row i of ``seq_cache`` into slot ``slots[i]`` for every i
         with ``valid[i]`` (both (max_batch,), traced)."""
@@ -206,34 +276,73 @@ class Executor:
                 updated, cache)
         return cache
 
+    def _insert_burst_fn_paged(self, cache, seq_cache, slots, valid,
+                               block_rows):
+        """Paged burst: scatter row i of the dense prefill output into the
+        blocks of ``block_rows[i]`` ((max_batch, n_bt), traced)."""
+        for i in range(self.max_batch):
+            row = self.model.slice_cache(seq_cache, jnp.int32(i))
+            updated = self.model.insert_cache(cache, row, slots[i],
+                                              block_row=block_rows[i])
+            cache = jax.tree_util.tree_map(
+                lambda new, old, i=i: jnp.where(valid[i], new, old),
+                updated, cache)
+        return cache
+
     # ---------------------------------------------------------- entry points
+    def _init_cache_fn(self):
+        return self.model.init_cache(
+            self.max_batch, self.max_seq, dtype=self.dtype,
+            layout=self.layout,
+            block_size=self.block_size or None,
+            n_blocks=self.n_blocks if self.paged else None)
+
     def init_cache(self):
-        """The engine's batched decode cache, committed slot-over-data at
-        birth (placement happens inside ``Model.init_cache(mesh=...)``)."""
-        return self.model.init_cache(self.max_batch, self.max_seq,
-                                     dtype=self.dtype, mesh=self.mesh)
+        """The engine's batched decode cache, committed slot-over-data
+        (dense) / block-over-data (paged) at birth (placement happens
+        inside ``Model.init_cache(mesh=...)``)."""
+        return self.model.init_cache(
+            self.max_batch, self.max_seq, dtype=self.dtype, mesh=self.mesh,
+            layout=self.layout, block_size=self.block_size or None,
+            n_blocks=self.n_blocks if self.paged else None)
 
     def prefill(self, tokens, true_lens):
         return self._prefill(self.params, jnp.asarray(tokens),
                              jnp.asarray(true_lens))
 
-    def prefill_insert(self, tokens, true_lens, cache, slot: int):
+    def prefill_insert(self, tokens, true_lens, cache, slot: int,
+                       block_row=None):
+        if self.paged:
+            return self._prefill_insert(self.params, jnp.asarray(tokens),
+                                        jnp.asarray(true_lens), cache,
+                                        jnp.int32(slot),
+                                        jnp.asarray(block_row))
         return self._prefill_insert(self.params, jnp.asarray(tokens),
                                     jnp.asarray(true_lens), cache,
                                     jnp.int32(slot))
 
-    def insert_burst(self, cache, seq_cache, slots, valid):
+    def insert_burst(self, cache, seq_cache, slots, valid, block_rows=None):
+        if self.paged:
+            return self._insert_burst(cache, seq_cache, jnp.asarray(slots),
+                                      jnp.asarray(valid),
+                                      jnp.asarray(block_rows))
         return self._insert_burst(cache, seq_cache, jnp.asarray(slots),
                                   jnp.asarray(valid))
 
-    def decode(self, token, pos, active, cache):
+    def decode(self, token, pos, active, cache, block_table=None):
         """One decode step; inputs are committed slot-over-data so jit
         compiles the distributed step (computation follows data).  One
-        tree-level device_put moves all three step inputs in a single
-        transfer — this runs once per generated token."""
-        put = jax.device_put(
-            {"token": jnp.asarray(token), "pos": jnp.asarray(pos),
-             "active": jnp.asarray(active)}, self._step_shardings)
+        tree-level device_put moves all step inputs (including the paged
+        block table) in a single transfer — this runs once per generated
+        token."""
+        put = {"token": jnp.asarray(token), "pos": jnp.asarray(pos),
+               "active": jnp.asarray(active)}
+        if self.paged:
+            put["block_table"] = jnp.asarray(block_table)
+        put = jax.device_put(put, self._step_shardings)
+        if self.paged:
+            return self._decode(self.params, put["token"], put["pos"],
+                                put["active"], put["block_table"], cache)
         return self._decode(self.params, put["token"], put["pos"],
                             put["active"], cache)
 
@@ -242,3 +351,12 @@ class Executor:
         # _cache_size is a private jax API; degrade to -1 (unknown) rather
         # than fail the stats path if an upgrade removes it.
         return getattr(self._decode, "_cache_size", lambda: -1)()
+
+    def prefill_cache_sizes(self) -> dict:
+        """Compiled-shape counts per prefill path (the warmup log / the
+        warmup reachability test): burst prefill, fused prefill+insert,
+        burst insert."""
+        sz = lambda f: getattr(f, "_cache_size", lambda: -1)()
+        return {"prefill": sz(self._prefill),
+                "prefill_insert": sz(self._prefill_insert),
+                "insert_burst": sz(self._insert_burst)}

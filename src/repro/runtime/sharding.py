@@ -25,6 +25,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.psi import QuantizedTensor
+from repro.models.kvcache import KVCache
 
 FSDP_AXIS = "data"
 DP_AXES = ("pod", "data")        # outer batch axes when present
@@ -89,6 +90,20 @@ def slot_shard_map(cfg, mesh: Mesh, n_slots: int) -> np.ndarray:
     into per-shard free slots (DESIGN.md §5)."""
     d = batch_shard_count(cfg, mesh, n_slots)
     return (np.arange(n_slots) * d) // n_slots
+
+
+def block_shard_map(cfg, mesh: Mesh, n_total: int,
+                    n_usable: int = None) -> np.ndarray:
+    """block id -> data-shard index for a paged pool whose leading dim is
+    ``n_total`` blocks (``n_blocks`` usable + per-slot scratch — the WHOLE
+    dim is what GSPMD chunks over the data axes, so the map must be
+    computed against it).  Returns the map truncated to the ``n_usable``
+    allocatable ids the scheduler's BlockAllocator partitions over
+    (DESIGN.md §5); scratch blocks land on whatever shard the chunking
+    gives them and are never allocated."""
+    d = batch_shard_count(cfg, mesh, n_total)
+    full = (np.arange(n_total) * d) // n_total
+    return full[:n_usable if n_usable is not None else n_total]
 
 
 # ---------------------------------------------------------------------------
@@ -289,22 +304,33 @@ def _kv_layout(cfg, mesh: Mesh, B, C, Hkv):
     return bax, seq_ax, head_ax
 
 
-def _serve_leaf_spec(cfg, mesh: Mesh, name: str, shape) -> P:
+def _serve_leaf_spec(cfg, mesh: Mesh, name: str, shape, paged=False) -> P:
     """Spec for one BLOCK-LEVEL cache leaf (batch/slot dim on axis 0).
     This is the core rule table; ``cache_specs`` prepends the layer-group
     dim for stacked leaves, and ``block_cache_specs`` applies it verbatim
     inside the decode scan (masked writes stay on-shard).
-    Block-level leaf shapes:
+    Block-level leaf shapes (dense layout):
       attn k/v:   (B, C, Hkv, hd)   k/v_scale: (B, C, Hkv, 1)
       k_pos:      (B, C)
       mamba ssm:  (B, di, N)   conv: (B, cw-1, di)
       rglru h:    (B, dr)      conv: (B, cw-1, dr)
       enc_out:    (B, F, d)
+    Paged layout (``paged=True``): pool leaves (N_total, bs, Hkv, hd) /
+    scale (N_total, bs, Hkv, 1) — the BLOCK dim shards over the data axes
+    (the allocator follows ``block_shard_map``, replacing the contiguous
+    slot-chunk assumption), heads over "model" when divisible, and the
+    in-block position dim stays replicated (a block is the indivisible
+    transfer unit).
     """
     use_tp = tp_enabled(cfg)
     B = shape[0]
     spec = [None] * len(shape)
     spec[0] = _pick_batch_axes(B, mesh, _dp(mesh, cfg))
+    if paged:
+        if (len(shape) == 4 and use_tp
+                and shape[2] % mesh.shape.get("model", 1) == 0):
+            spec[2] = "model"
+        return P(*spec)
     if name.endswith("enc_out"):
         return P(*spec)
     if re.search(r"(^|/)k$|(^|/)v$|k_scale$|v_scale$", name) and len(shape) == 4:
@@ -329,26 +355,42 @@ def _serve_leaf_spec(cfg, mesh: Mesh, name: str, shape) -> P:
 
 
 def cache_specs(cfg, mesh: Mesh, cache_tree, seq_shard: bool = False):
-    """Decode cache: batch/slot dim over the data axes; KV seq (ring) dim
-    over "data" when the batch can't use it (long_500k); mamba/rg-lru
-    channel state over "model"; KV heads over "model" only when divisible
-    (MQA/GQA: replicate).  Stack leaves carry the layer-group dim first
-    (always replicated); the per-leaf rules live in ``_serve_leaf_spec``.
+    """Decode cache: batch/slot (or paged block-pool) dim over the data
+    axes; KV seq (ring) dim over "data" when the batch can't use it
+    (long_500k); mamba/rg-lru channel state over "model"; KV heads over
+    "model" only when divisible (MQA/GQA: replicate).  Stack leaves carry
+    the layer-group dim first (always replicated); the per-leaf rules live
+    in ``_serve_leaf_spec``.
+
+    Accepts either a typed :class:`KVCache` — the layout is read off its
+    static metadata and a structure-equal KVCache *of specs* is returned
+    (the QuantizedTensor-of-specs pattern, so device_put / out_shardings
+    see matching trees) — or a bare kv stack tree (dense rules).
     """
+    if isinstance(cache_tree, KVCache):
+        kv = _kv_tree_specs(cfg, mesh, cache_tree.kv, cache_tree.paged)
+        enc = (None if cache_tree.enc_out is None else _serve_leaf_spec(
+            cfg, mesh, "enc_out", cache_tree.enc_out.shape))
+        return cache_tree.replace(kv=kv, enc_out=enc)
+    return _kv_tree_specs(cfg, mesh, cache_tree, paged=False)
+
+
+def _kv_tree_specs(cfg, mesh: Mesh, kv_tree, paged: bool):
     def one(path, leaf):
         name = _path_str(path)
         if leaf.ndim == 0:
             return P()
         if re.search(r"(^|/)b\d+/", name):
             # scanned group leaf: replicated layer-group dim leads
-            return P(None, *_serve_leaf_spec(cfg, mesh, name, leaf.shape[1:]))
+            return P(None, *_serve_leaf_spec(cfg, mesh, name, leaf.shape[1:],
+                                             paged))
         # enc_out / unrolled tail-block leaves: batch is axis 0 already
-        return _serve_leaf_spec(cfg, mesh, name, leaf.shape)
+        return _serve_leaf_spec(cfg, mesh, name, leaf.shape, paged)
 
-    return jax.tree_util.tree_map_with_path(one, cache_tree)
+    return jax.tree_util.tree_map_with_path(one, kv_tree)
 
 
-def block_cache_specs(cfg, mesh: Mesh, block_tree):
+def block_cache_specs(cfg, mesh: Mesh, block_tree, paged: bool = False):
     """Specs for one block's cache dict as seen INSIDE the decode scan
     (no leading group dim).  Used by the masked-write constraint the
     executor threads through ``Model.decode_step`` (DESIGN.md §5)."""
@@ -356,18 +398,19 @@ def block_cache_specs(cfg, mesh: Mesh, block_tree):
         name = _path_str(path)
         if leaf.ndim == 0:
             return P()
-        return _serve_leaf_spec(cfg, mesh, name, leaf.shape)
+        return _serve_leaf_spec(cfg, mesh, name, leaf.shape, paged)
 
     return jax.tree_util.tree_map_with_path(one, block_tree)
 
 
-def constrain_block_cache(cfg, mesh: Mesh, block_tree):
+def constrain_block_cache(cfg, mesh: Mesh, block_tree, paged: bool = False):
     """with_sharding_constraint over one block's cache dict (decode scan
-    body): pins the masked scatter writes to the slot-over-data layout so
-    the SPMD partitioner cannot fall back to replicate-and-gather.  The
-    executor threads this through ``Model.decode_step`` -> transformer ->
-    attention; it is a no-op on a single-device mesh."""
-    specs = block_cache_specs(cfg, mesh, block_tree)
+    body): pins the masked scatter writes to the slot-over-data (dense) or
+    block-over-data (paged) layout so the SPMD partitioner cannot fall back
+    to replicate-and-gather.  The executor threads this through
+    ``Model.decode_step`` -> transformer -> attention; it is a no-op on a
+    single-device mesh."""
+    specs = block_cache_specs(cfg, mesh, block_tree, paged)
     return jax.tree_util.tree_map(
         lambda leaf, s: jax.lax.with_sharding_constraint(
             leaf, NamedSharding(mesh, s)),

@@ -156,7 +156,10 @@ def test_executor_prefill_decode_matches_single_device():
         from repro.models import build_model
         from repro.runtime.executor import Executor
 
-        base = reduced_config(get_config("qwen3-8b"))
+        # dense layout pinned: this test exercises the slot-slab machinery
+        # (insert_burst row writes); the paged twin lives in
+        # test_paged_serving_sharded_matches_dense_single_device
+        base = reduced_config(get_config("qwen3-8b"), cache_layout="dense")
         model = build_model(base)
         p32 = model.init(jax.random.PRNGKey(0))
         flavors = {
@@ -242,6 +245,61 @@ def test_sharded_serving_tokens_identical():
                   for r in d8 if r.rid < 4}
         assert shards == {0, 1, 2, 3}, shards
         print("OK", st8["slot_shards"])
+    """)
+    assert "OK 4" in out
+
+
+def test_paged_serving_sharded_matches_dense_single_device():
+    """Acceptance: the paged layout on a forced 8-device (4, 2) mesh —
+    block pools sharded block-over-data, block tables as decode-step inputs
+    — produces token streams identical to BOTH the single-device dense
+    engine and the sharded dense engine, in continuous and static modes,
+    with the decode step compiling exactly once per server."""
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch.scheduler import Request
+        from repro.launch.serve import Server
+        from repro.models import build_model
+
+        cfg = reduced_config(get_config("qwen3-8b"))
+        model = build_model(cfg)
+        params = model.quantize(model.init(jax.random.PRNGKey(0)), 8)
+        cfg = dataclasses.replace(cfg, quant_mode="psi8")
+        assert cfg.resolved_cache_layout == "paged"
+        dense_cfg = dataclasses.replace(cfg, cache_layout="dense")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(5 + 3 * i,))
+                   .astype(np.int32) for i in range(6)]
+        def mk():
+            return [Request(rid=i, prompt=prompts[i], max_new=mn,
+                            arrival_s=0.0)
+                    for i, mn in enumerate([3, 7, 2, 5, 4, 6])]
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+
+        ref = Server(dense_cfg, params, max_batch=4, max_seq=64)
+        t_ref = toks(ref.serve(mk(), continuous=True)[0])
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        sd = Server(dense_cfg, params, max_batch=4, max_seq=64, mesh=mesh)
+        d_d, st_d = sd.serve(mk(), continuous=True)
+        sp = Server(cfg, params, max_batch=4, max_seq=64,
+                    mesh=make_mesh((4, 2), ("data", "model")))
+        ex = sp.executor
+        assert ex.paged and ex.n_slot_shards == 4
+        assert ex.n_block_shards == 4, ex.n_block_shards
+        # block->shard map follows GSPMD chunking of the full pool dim
+        assert len(ex.block_shards) == ex.n_blocks
+        d_pc, st_pc = sp.serve(mk(), continuous=True)
+        d_ps, st_ps = sp.serve(mk(), continuous=False)
+        assert toks(d_d) == t_ref
+        assert toks(d_pc) == t_ref and toks(d_ps) == t_ref
+        assert st_pc["decode_compiles"] == 1, st_pc["decode_compiles"]
+        assert st_d["decode_compiles"] == 1
+        assert st_pc["cache_layout"] == "paged"
+        assert st_pc["blocks_free_end"] == st_pc["n_blocks"]
+        print("OK", st_pc["slot_shards"], st_pc["n_blocks"])
     """)
     assert "OK 4" in out
 
