@@ -84,6 +84,12 @@ class ModelConfig:
     cache_layout: str = "auto"             # auto | dense | paged
     cache_block_size: int = 16             # positions per paged block
 
+    # --- shared-prefix block reuse (DESIGN.md §3 "Prefix cache"): serve
+    # identical block-aligned prompt prefixes out of ref-counted pool
+    # blocks instead of re-prefilling them.  Requires the paged layout and
+    # plain-RoPE positions (set per serve via --prefix-cache). ---
+    prefix_cache: bool = False
+
     # --- citation bookkeeping (verification tier from the assignment) ---
     source: str = ""
 
@@ -131,6 +137,26 @@ class ModelConfig:
                 f"pure full-attention stack (family {self.family!r}, "
                 f"attn_type {self.attn_type!r} must use dense)")
         return self.cache_layout
+
+    @property
+    def prefix_cache_enabled(self) -> bool:
+        """``prefix_cache`` validated against the resolved layout: block
+        reuse shares PAGED pool blocks (a dense slab has no blocks to
+        share) and replays absolute RoPE positions (mrope/2-D/sinusoidal
+        position schemes embed positions the suffix prefill cannot
+        reproduce from a scalar ``pos0``)."""
+        if not self.prefix_cache:
+            return False
+        if self.resolved_cache_layout != "paged":
+            raise ValueError(
+                f"{self.name or self.family}: prefix_cache requires the "
+                f"paged cache layout (resolved "
+                f"{self.resolved_cache_layout!r})")
+        if self.rope != "rope":
+            raise ValueError(
+                f"{self.name or self.family}: prefix_cache requires plain "
+                f"RoPE positions, got rope={self.rope!r}")
+        return True
 
     @property
     def sub_quadratic(self) -> bool:

@@ -12,6 +12,7 @@ per-request latency accounting — so it is unit-testable without a model.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -36,6 +37,9 @@ class Request:
     finish_s: Optional[float] = None
     slot: Optional[int] = None          # slot the request decoded in
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # --- prefix-cache accounting (DESIGN.md §3 "Prefix cache") ---
+    prefix_blocks: List[int] = dataclasses.field(default_factory=list)
+    prefix_hit_tokens: int = 0          # prompt tokens served from the cache
 
     @property
     def latency_s(self) -> float:
@@ -68,18 +72,35 @@ class Request:
 def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
                   max_new: int, vocab_size: int, seed: int = 0,
                   min_new: Optional[int] = None,
-                  prompt_jitter: int = 0) -> List[Request]:
+                  prompt_jitter: int = 0,
+                  shared_prefix_len: int = 0) -> List[Request]:
     """Simulated open-loop arrival process: exponential inter-arrival times at
     ``rate_rps`` requests/s, heterogeneous decode budgets in
     ``[min_new, max_new]`` (default min_new: ``max(1, max_new // 4)``; the
     heterogeneity is what a batch-synchronous server pays for — every
     sequence in a static batch runs to the batch max).  Deterministic given
     ``seed``.
+
+    ``shared_prefix_len`` > 0 prepends ONE fixed random prefix of that many
+    tokens to every prompt — the shared-system-prompt traffic shape the
+    prefix cache (DESIGN.md §3) exists for; ``prompt_len`` then sizes only
+    the per-request unique tail.
     """
+    # rate_rps == 0 used to raise a bare ZeroDivisionError below, and a
+    # negative rate silently produced a time-REVERSED trace (negative
+    # exponential inter-arrivals); both are caller bugs — reject loudly.
+    if not rate_rps > 0:
+        raise ValueError(
+            f"rate_rps must be > 0 (requests/s), got {rate_rps!r}")
+    if shared_prefix_len < 0:
+        raise ValueError(
+            f"shared_prefix_len must be >= 0, got {shared_prefix_len}")
     rng = np.random.default_rng(seed)
     min_new = max(1, max_new // 4) if min_new is None else max(1, min_new)
     if min_new > max_new:
         raise ValueError(f"min_new={min_new} exceeds max_new={max_new}")
+    shared = (rng.integers(0, vocab_size, size=(shared_prefix_len,))
+              .astype(np.int32) if shared_prefix_len else None)
     reqs, t = [], 0.0
     for i in range(n_requests):
         t += float(rng.exponential(1.0 / rate_rps))
@@ -88,6 +109,8 @@ def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
             plen = max(1, prompt_len + int(rng.integers(-prompt_jitter,
                                                         prompt_jitter + 1)))
         prompt = rng.integers(0, vocab_size, size=(plen,)).astype(np.int32)
+        if shared is not None:
+            prompt = np.concatenate([shared, prompt])
         reqs.append(Request(rid=i, prompt=prompt,
                             max_new=int(rng.integers(min_new, max_new + 1)),
                             arrival_s=t))
@@ -117,10 +140,15 @@ class SlotAllocator:
             shard_of = [(s * self.n_shards) // n_slots for s in range(n_slots)]
         self.shard_of = [int(s) for s in shard_of]
         assert len(self.shard_of) == n_slots
+        # Per-shard min-heaps (lowest index pops first — the classic reuse
+        # order the property tests assert).  Heaps make release O(log n)
+        # instead of the old re-sort's O(n log n) per freed slot, which went
+        # quadratic over a retirement burst.
         self._free: List[List[int]] = [
-            sorted((s for s in range(n_slots) if self.shard_of[s] == i),
-                   reverse=True)                          # pop() -> lowest
+            [s for s in range(n_slots) if self.shard_of[s] == i]
             for i in range(self.n_shards)]
+        for pool in self._free:
+            heapq.heapify(pool)
         self.occupant: List[Optional[int]] = [None] * n_slots  # slot -> rid
 
     @property
@@ -133,7 +161,7 @@ class SlotAllocator:
     def alloc(self, rid: int) -> int:
         shard = max(range(self.n_shards),
                     key=lambda i: (len(self._free[i]), -i))
-        slot = self._free[shard].pop()
+        slot = heapq.heappop(self._free[shard])
         self.occupant[slot] = rid
         return slot
 
@@ -141,9 +169,7 @@ class SlotAllocator:
         if self.occupant[slot] is None:
             raise ValueError(f"slot {slot} is already free")
         self.occupant[slot] = None
-        pool = self._free[self.shard_of[slot]]
-        pool.append(slot)
-        pool.sort(reverse=True)
+        heapq.heappush(self._free[self.shard_of[slot]], slot)
 
 
 # ---------------------------------------------------------------------------
@@ -158,19 +184,30 @@ class BlockAllocator:
     Lifecycle per request (driven by the Scheduler/engine):
 
       * ``reserve(rid, n)`` at admission — books the request's WORST-CASE
-        block count (bucketed prompt + its own ``max_new``) so a running
-        request can never starve mid-decode; admission is gated on
-        ``can_reserve`` (free minus everyone's outstanding reservations).
+        block count (bucketed prompt + its own ``max_new``, minus any
+        prefix-cache hit) so a running request can never starve mid-decode;
+        admission is gated on ``can_reserve`` (free minus everyone's
+        outstanding reservations).
       * ``alloc(rid)`` on demand — prefill insertion takes the prompt's
         blocks, decode takes one more each time a sequence crosses a
         block boundary; every alloc draws down the reservation.
-      * ``release(rid)`` at retirement — returns every owned block AND the
-        unused tail of the reservation (early EOS gives capacity back).
+      * ``release(rid)`` at retirement — drops every reference ``rid``
+        holds AND the unused tail of the reservation (early EOS gives
+        capacity back).
 
-    Invariants (property-tested): a block is owned by at most one request;
-    ``free_count + in_use == n_blocks`` always; ``high_watermark`` is
-    monotone; a full admit/alloc/release trace replay restores the exact
-    initial free set (no leaks, no double-frees).
+    **Reference counting** (DESIGN.md §3 "Prefix cache"): every in-use
+    block carries a refcount.  ``alloc`` creates an exclusive block
+    (refcount 1); ``attach`` shares already-populated blocks read-only into
+    another request (refcount += 1); the prefix cache pins published blocks
+    with ``ref_block``/``unref_block``.  A block returns to the free pool
+    only when its LAST reference drops, and ``fork`` gives copy-on-write
+    semantics: a request that must mutate a shared block trades its shared
+    reference for a fresh exclusive block (the caller copies the contents).
+
+    Invariants (property-tested): a block is never handed out twice while
+    referenced; ``free_count + in_use == n_blocks`` always, counting shared
+    blocks ONCE; ``high_watermark`` is monotone; a full trace replay
+    (everything released/unpinned) restores the exact initial free set.
     """
 
     def __init__(self, n_blocks: int, n_shards: int = 1,
@@ -182,14 +219,24 @@ class BlockAllocator:
                         for b in range(n_blocks)]
         self.shard_of = [int(s) for s in shard_of]
         assert len(self.shard_of) == n_blocks
+        # Per-shard min-heaps (lowest block index pops first); heap release
+        # is O(log n) vs the old per-free re-sort's O(n log n), which went
+        # quadratic over a retirement burst.
         self._free: List[List[int]] = [
-            sorted((b for b in range(n_blocks) if self.shard_of[b] == i),
-                   reverse=True)                          # pop() -> lowest
+            [b for b in range(n_blocks) if self.shard_of[b] == i]
             for i in range(self.n_shards)]
+        for pool in self._free:
+            heapq.heapify(pool)
         self.owner: List[Optional[int]] = [None] * n_blocks  # block -> rid
-        self._owned: Dict[int, List[int]] = {}               # rid -> blocks
+        self.refcount: List[int] = [0] * n_blocks
+        self._held: Dict[int, List[int]] = {}  # rid -> referenced blocks,
+        #                                        in logical-block order
         self._reserved: Dict[int, int] = {}    # rid -> outstanding blocks
         self.high_watermark = 0                # peak blocks ever in use
+        # bumped whenever capacity may have GROWN (a block freed, a
+        # reservation refunded): lets a blocked admission skip retrying —
+        # lookup + evict-scan per decode step — until something changed
+        self.capacity_version = 0
 
     # ---- accounting ----
     @property
@@ -198,6 +245,7 @@ class BlockAllocator:
 
     @property
     def in_use(self) -> int:
+        """Blocks holding live data; a block shared N ways counts once."""
         return self.n_blocks - self.free_count
 
     @property
@@ -206,14 +254,19 @@ class BlockAllocator:
         return sum(self._reserved.values())
 
     def owned_by(self, rid: int) -> List[int]:
-        return list(self._owned.get(rid, ()))
+        """Blocks ``rid`` references (shared prefix blocks first, then its
+        own allocations), in logical-block order."""
+        return list(self._held.get(rid, ()))
+
+    def is_shared(self, blk: int) -> bool:
+        return self.refcount[blk] > 1
 
     # ---- lifecycle ----
     def can_reserve(self, n: int) -> bool:
         return n <= self.free_count - self.reserved_total
 
     def reserve(self, rid: int, n: int) -> None:
-        if rid in self._reserved or rid in self._owned:
+        if rid in self._reserved:
             raise ValueError(f"request {rid} already holds a reservation")
         if not self.can_reserve(n):
             raise ValueError(
@@ -222,9 +275,10 @@ class BlockAllocator:
         self._reserved[rid] = n
 
     def alloc(self, rid: int, shard: Optional[int] = None) -> int:
-        """Take one block for ``rid``, drawing down its reservation.
-        ``shard`` is a placement hint (the slot's data shard): honored when
-        that shard has free blocks, else falls back to the fullest pool."""
+        """Take one exclusive block for ``rid``, drawing down its
+        reservation.  ``shard`` is a placement hint (the slot's data
+        shard): honored when that shard has free blocks, else falls back
+        to the fullest pool."""
         if self._reserved.get(rid, 0) <= 0:
             raise ValueError(
                 f"request {rid} allocating beyond its reservation — "
@@ -237,26 +291,86 @@ class BlockAllocator:
         if not pool:
             raise ValueError("no free blocks despite reservation — "
                              "allocator invariant broken")
-        blk = pool.pop()
+        blk = heapq.heappop(pool)
         self.owner[blk] = rid
-        self._owned.setdefault(rid, []).append(blk)
+        self.refcount[blk] = 1
+        self._held.setdefault(rid, []).append(blk)
         self._reserved[rid] -= 1
         self.high_watermark = max(self.high_watermark, self.in_use)
         return blk
 
-    def release(self, rid: int) -> int:
-        """Free every block owned by ``rid`` and drop the unused remainder
-        of its reservation; returns how many blocks were freed."""
-        blocks = self._owned.pop(rid, [])
+    # ---- sharing (prefix cache) ----
+    def attach(self, rid: int, blocks: Sequence[int]) -> None:
+        """Share already-populated blocks read-only into ``rid`` (a prefix
+        cache hit): each gains a reference and joins ``rid``'s held list —
+        ahead of any of its own allocations, preserving logical order.
+        Validates everything BEFORE the first increment, so a rejected
+        attach leaves no stray references behind."""
+        if self._held.get(rid):
+            raise ValueError(
+                f"request {rid} already holds blocks; attach prefix blocks "
+                f"before any alloc so logical order is preserved")
+        free = [blk for blk in blocks if self.refcount[blk] <= 0]
+        if free:
+            raise ValueError(
+                f"cannot attach free block(s) {free} to request {rid}")
         for blk in blocks:
-            if self.owner[blk] != rid:
-                raise ValueError(f"block {blk} not owned by request {rid}")
+            self.refcount[blk] += 1
+        self._held.setdefault(rid, []).extend(blocks)
+
+    def ref_block(self, blk: int) -> None:
+        """Pin a populated block (the prefix cache publishing it)."""
+        if self.refcount[blk] <= 0:
+            raise ValueError(f"cannot pin free block {blk}")
+        self.refcount[blk] += 1
+
+    def unref_block(self, blk: int) -> bool:
+        """Drop one pin; returns True when the block was freed."""
+        return self._decref(blk)
+
+    def fork(self, rid: int, blk: int) -> int:
+        """Copy-on-write: make ``rid``'s reference to ``blk`` exclusive.
+        Already-exclusive blocks are returned as-is; a shared block is
+        swapped for a fresh allocation (drawing down the reservation) and
+        the caller must copy the block's device contents to the returned
+        id before writing."""
+        held = self._held.get(rid, [])
+        if blk not in held:
+            raise ValueError(f"block {blk} not referenced by request {rid}")
+        if self.refcount[blk] == 1:
+            return blk
+        new = self.alloc(rid, shard=self.shard_of[blk])
+        # keep logical order: the fresh block replaces the shared one
+        held.pop()                       # alloc appended it at the end
+        held[held.index(blk)] = new
+        self._decref(blk)
+        return new
+
+    # ---- release ----
+    def _decref(self, blk: int) -> bool:
+        if self.refcount[blk] <= 0:
+            raise ValueError(f"refcount underflow on block {blk}")
+        self.refcount[blk] -= 1
+        if self.refcount[blk] == 0:
             self.owner[blk] = None
-            pool = self._free[self.shard_of[blk]]
-            pool.append(blk)
-            pool.sort(reverse=True)
-        self._reserved.pop(rid, None)
-        return len(blocks)
+            heapq.heappush(self._free[self.shard_of[blk]], blk)
+            self.capacity_version += 1
+            return True
+        return False
+
+    def release(self, rid: int) -> int:
+        """Drop every reference ``rid`` holds (freeing blocks whose LAST
+        reference this was — never a block with refs remaining) and the
+        unused remainder of its reservation; returns how many blocks were
+        actually freed."""
+        freed = 0
+        for blk in self._held.pop(rid, []):
+            if self.owner[blk] == rid:
+                self.owner[blk] = None  # survivors belong to their sharers
+            freed += bool(self._decref(blk))
+        if self._reserved.pop(rid, None):
+            self.capacity_version += 1     # reservation refund
+        return freed
 
 
 # ---------------------------------------------------------------------------
@@ -278,7 +392,8 @@ class Scheduler:
                  n_shards: int = 1,
                  shard_of: Optional[Sequence[int]] = None,
                  blocks: Optional[BlockAllocator] = None,
-                 blocks_needed: Optional[Callable[[Request], int]] = None):
+                 blocks_needed: Optional[Callable[[Request], int]] = None,
+                 prefix=None):
         for r in requests:
             if r.admit_s is not None or r.tokens:
                 raise ValueError(
@@ -296,8 +411,20 @@ class Scheduler:
         self._blocks_needed = blocks_needed
         if (blocks is None) != (blocks_needed is None):
             raise ValueError("blocks and blocks_needed come as a pair")
+        # Prefix cache (DESIGN.md §3 "Prefix cache"): admission looks up the
+        # longest cached block-aligned prompt prefix, shares those blocks
+        # into the request (shrinking its reservation), and retirement
+        # publishes completed prompts' full blocks back into the cache.
+        self.prefix = prefix
+        if prefix is not None and blocks is None:
+            raise ValueError("a prefix cache needs a BlockAllocator")
         self.running: Dict[int, Request] = {}       # slot -> request
         self.finished: List[Request] = []
+        # head-of-line block memo: (rid, capacity_version) of the last
+        # admission attempt that failed on blocks — retrying is pointless
+        # (and, with a prefix cache, re-pays lookup hashing + the eviction
+        # scan every decode step) until capacity may have grown
+        self._hol_blocked: Optional[Tuple[int, int]] = None
 
     # ---- queue movement ----
     def poll(self, now: float) -> int:
@@ -316,10 +443,33 @@ class Scheduler:
         while self.waiting and self.slots.free_count:
             req = self.waiting[0]
             if self.blocks is not None:
-                need = self._blocks_needed(req)
+                if self._hol_blocked == (req.rid,
+                                         self.blocks.capacity_version):
+                    break      # nothing changed since the last failure
+                hit: List[int] = []
+                if self.prefix is not None:
+                    hit = self.prefix.lookup(req.prompt)
+                    if hit:
+                        # attach BEFORE any eviction attempt: the extra
+                        # reference makes the matched entries unevictable
+                        self.blocks.attach(req.rid, hit)
+                need = self._blocks_needed(req) - len(hit)
                 if not self.blocks.can_reserve(need):
-                    break          # FIFO: head-of-line waits for capacity
+                    # LRU-evict unreferenced cache entries to make room
+                    if self.prefix is not None:
+                        self.prefix.evict_until(self.blocks, need)
+                    if not self.blocks.can_reserve(need):
+                        if hit:          # roll back the shared references
+                            self.blocks.release(req.rid)
+                        self._hol_blocked = (req.rid,
+                                             self.blocks.capacity_version)
+                        break  # FIFO: head-of-line waits for capacity
                 self.blocks.reserve(req.rid, need)
+                req.prefix_blocks = list(hit)
+                req.prefix_hit_tokens = (len(hit) * self.prefix.block_size
+                                         if self.prefix is not None else 0)
+                if self.prefix is not None:
+                    self.prefix.note_lookup(hit)
             self.waiting.popleft()
             slot = self.slots.alloc(req.rid)
             req.slot = slot
@@ -333,6 +483,12 @@ class Scheduler:
         req.finish_s = now
         self.slots.release(slot)
         if self.blocks is not None:
+            if self.prefix is not None:
+                # publish the completed prompt's full blocks (the cache
+                # pins them) before the request's own references drop
+                self.prefix.publish(req.prompt,
+                                    self.blocks.owned_by(req.rid),
+                                    self.blocks)
             self.blocks.release(req.rid)
         self.finished.append(req)
         return req
@@ -373,7 +529,10 @@ def summarize(requests: Sequence[Request], wall_s: float,
         "n_requests": len(requests),
         "tokens": tokens,
         "wall_s": wall_s,
-        "tok_per_s": tokens / wall_s if wall_s else float("inf"),
+        # wall_s == 0 (a degenerate instant trace) used to yield inf, which
+        # json.dump writes as bare ``Infinity`` — INVALID JSON that breaks
+        # strict parsers of BENCH_serve.json.  0.0 is the honest degenerate.
+        "tok_per_s": tokens / wall_s if wall_s > 0 else 0.0,
         "p50_latency_s": _pctile(lats, 50),
         "p99_latency_s": _pctile(lats, 99),
         "p50_ttft_s": _pctile(ttfts, 50),

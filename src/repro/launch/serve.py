@@ -52,6 +52,7 @@ from repro.configs import get_config, reduced_config
 from repro.core.quantizer import (parse_policy, parse_quant_mode,
                                   serving_mode_choices)
 from repro.launch.mesh import make_mesh
+from repro.launch.prefix_cache import PrefixCache
 from repro.launch.scheduler import (BlockAllocator, Request, Scheduler,
                                     poisson_trace, summarize)
 from repro.models import build_model, kvcache as kvc
@@ -68,7 +69,14 @@ def parse_mesh_spec(spec: Optional[str]):
     one device -> None (the Executor's single-device path)."""
     if not spec or spec == "1x1":
         return None
-    d, m = (int(p) for p in spec.lower().split("x"))
+    try:
+        d, m = (int(p) for p in spec.lower().split("x"))
+    except ValueError as e:
+        # a bare "8" or a "2x2x2" used to surface as an opaque unpacking
+        # ValueError; say what shape the spec must have
+        raise ValueError(
+            f"malformed mesh spec {spec!r}: want \"DATAxMODEL\" with two "
+            f"integer extents, e.g. \"1x1\" or \"4x2\"") from e
     if d * m > len(jax.devices()):
         raise ValueError(
             f"mesh {spec} needs {d * m} devices, have {len(jax.devices())} "
@@ -88,6 +96,10 @@ class Server:
                  n_blocks: Optional[int] = None):
         self.cfg = cfg
         self.paged = cfg.resolved_cache_layout == kvc.PAGED
+        # Shared-prefix block reuse (DESIGN.md §3 "Prefix cache"):
+        # validated here so an impossible combination (dense layout, mrope)
+        # fails at construction, not mid-serve.
+        self.prefix_enabled = cfg.prefix_cache_enabled
         if n_blocks is not None and not self.paged:
             raise ValueError(
                 "n_blocks/--cache-blocks only applies to the paged cache "
@@ -172,7 +184,20 @@ class Server:
         the host block table ``bt``; the insert scatters the prefilled rows
         into exactly those blocks (a burst's shared padding beyond a row's
         own allocation routes to the slot's scratch block).
+
+        Prefix cache on: every admission runs the fused suffix-prefill path
+        individually (hits are per-request — nctx varies — so the padded
+        burst cannot batch them), sharing the hit's blocks read-only into
+        the table and prefilling only the uncached suffix.
         """
+        if self.prefix_enabled:
+            if len(admits) > 1:
+                firsts = []
+                for adm in admits:
+                    f, cache = self._prefill_admits(cache, [adm], sched, bt)
+                    firsts.extend(f)
+                return firsts, cache
+            return self._prefill_prefix(cache, *admits[0], sched, bt)
         lens = [len(r.prompt) for _, r in admits]
         sb = self._bucket_len(max(lens))
         if self.paged:
@@ -236,6 +261,31 @@ class Server:
                                            block_rows=rows)
         return [int(first[i]) for i in range(len(admits))], cache
 
+    def _prefill_prefix(self, cache, slot, req, sched, bt):
+        """Fused suffix prefill for one admission under the prefix cache
+        (DESIGN.md §3): the hit's blocks enter the table read-only (shared
+        references held by the scheduler), fresh blocks cover the bucketed
+        suffix, and the executor prefills positions ``[pos0, pos0+Sb)``
+        against the gathered prefix context."""
+        bs = self.block_size
+        nctx = len(req.prefix_blocks)
+        pos0 = nctx * bs
+        suffix = req.prompt[pos0:]
+        sb = self._bucket_len(len(suffix))
+        pref = self._block_pref(slot)
+        bt[slot, :] = -1
+        if nctx:
+            bt[slot, :nctx] = req.prefix_blocks
+        for j in range(nctx, kvc.blocks_for(pos0 + sb, bs)):
+            bt[slot, j] = sched.blocks.alloc(req.rid, shard=pref)
+        toks = np.zeros((1, sb), np.int32)
+        toks[0, :len(suffix)] = suffix
+        tl = np.asarray([len(suffix)], np.int32)
+        first, cache = self.executor.prefill_insert(
+            toks, tl, cache, slot, block_row=bt[slot],
+            ctx_ids=bt[slot, :nctx])
+        return [int(first[0])], cache
+
     def warmup(self, requests: Sequence[Request], verbose: bool = True) -> int:
         """Compile every shape the trace CAN reach (per prompt bucket: the
         fused single-admission prefill+insert, plus — only when the trace
@@ -249,6 +299,8 @@ class Server:
         logged, so compile-count regressions are visible in serve output).
         """
         ex = self.executor
+        if self.prefix_enabled:
+            return self._warmup_prefix(requests, verbose)
         buckets = sorted({self._bucket_len(len(r.prompt)) for r in requests})
         # Burst admission needs >= 2 requests waiting at once; a 1-request
         # trace provably cannot reach those shapes.
@@ -295,6 +347,49 @@ class Server:
                      if skipped else "") + ")")
         return n_shapes
 
+    def _warmup_prefix(self, requests: Sequence[Request],
+                       verbose: bool) -> int:
+        """Warmup under the prefix cache: every admission takes the fused
+        suffix-prefill path, so compile, per distinct prompt length, the
+        cold miss (nctx=0 at the full bucket) and the deepest possible hit
+        (the longest block-aligned proper prefix, at the suffix's bucket).
+        Intermediate hit depths — partial overlaps between different
+        prompts — compile lazily mid-serve.  The decode step is shared
+        with the non-prefix engine and still compiles exactly once."""
+        ex = self.executor
+        # the deepest REACHABLE hit must mirror PrefixCache's caps: keep
+        # >= 1 suffix token AND land pos0 on the prefill-bucket grid
+        step = PrefixCache.hit_alignment_step(self.block_size, self.bucket)
+        shapes = set()
+        for r in requests:
+            L = len(r.prompt)
+            shapes.add((self._bucket_len(L), 0))
+            nmax = ((L - 1) // self.block_size // step) * step
+            if nmax:
+                shapes.add((self._bucket_len(L - nmax * self.block_size),
+                            nmax))
+        cache = ex.init_cache()
+        n_shapes = 0
+        for sb, nctx in sorted(shapes):
+            toks1 = np.zeros((1, sb), np.int32)
+            tl1 = np.ones((1,), np.int32)
+            brow = np.full((ex.n_bt,), -1, np.int32)
+            _, cache = jax.block_until_ready(
+                ex.prefill_insert(toks1, tl1, cache, 0, block_row=brow,
+                                  ctx_ids=np.zeros((nctx,), np.int32)))
+            n_shapes += 1
+        tok = np.zeros((self.max_batch, 1), np.int32)
+        act = np.zeros((self.max_batch,), bool)
+        bt = np.full((self.max_batch, ex.n_bt), -1, np.int32)
+        jax.block_until_ready(ex.decode(tok, tok, act, cache,
+                                        block_table=bt))
+        n_shapes += 1
+        if verbose:
+            print(f"[warmup] compiled {n_shapes} shapes "
+                  f"({len(shapes)} (bucket, prefix-depth) pair(s), layout "
+                  f"paged + prefix cache)")
+        return n_shapes
+
     # ------------------------------------------------------------- the loop
     def serve(self, requests: Sequence[Request], continuous: bool = True,
               warmup: bool = True):
@@ -333,14 +428,22 @@ class Server:
         if warmup:
             self.warmup(requests)
         blocks = None
+        prefix = None
         if self.paged:
             blocks = BlockAllocator(ex.n_blocks, n_shards=ex.n_block_shards,
                                     shard_of=ex.block_shards)
+            if self.prefix_enabled:
+                # align hits to the prefill-bucket grid: the reservation /
+                # fail-fast / table-width math bounds suffix coverage by
+                # bucket(len(prompt)) only for bucket-aligned pos0
+                prefix = PrefixCache(self.block_size,
+                                     align_tokens=self.bucket)
         sched = Scheduler(requests, self.max_batch,
                           n_shards=ex.n_slot_shards, shard_of=ex.slot_shards,
                           blocks=blocks,
                           blocks_needed=(self._blocks_needed if blocks
-                                         is not None else None))
+                                         is not None else None),
+                          prefix=prefix)
         cache = ex.init_cache()
         B = self.max_batch
         tok = np.zeros((B, 1), np.int32)
@@ -415,12 +518,27 @@ class Server:
         stats["cache_layout"] = "paged" if self.paged else "dense"
         stats["cache_bytes"] = self.cache_bytes
         stats["peak_concurrency"] = peak_running
+        # prefill accounting (prefix cache or not): tokens the engine
+        # actually forwarded vs tokens served out of shared blocks
+        n_done = max(len(sched.finished), 1)
+        prefilled = int(sum(len(r.prompt) - r.prefix_hit_tokens
+                            for r in sched.finished))
+        stats["prefilled_tokens"] = prefilled
+        stats["prefilled_tokens_mean"] = round(prefilled / n_done, 2)
+        stats["prefix_tokens_reused"] = int(sum(r.prefix_hit_tokens
+                                                for r in sched.finished))
         if self.paged:
             stats["block_size"] = self.block_size
             stats["n_blocks"] = ex.n_blocks
             stats["peak_blocks_in_use"] = blocks.high_watermark
             stats["block_util_pct"] = round(
                 100.0 * blocks.high_watermark / max(ex.n_blocks, 1), 1)
+            if prefix is not None:
+                stats["prefix_cache"] = prefix.stats()
+                # teardown: with refcounts, "allocator back to initial"
+                # includes draining the LRU — after this, blocks_free_end
+                # must equal n_blocks again (leak check in tests)
+                prefix.drain(blocks)
             stats["blocks_free_end"] = blocks.free_count
         return sched.finished, stats
 
@@ -436,8 +554,10 @@ def build_server(args) -> Tuple[Server, object]:
         cfg,
         cache_layout=getattr(args, "cache_layout", "auto") or "auto",
         cache_block_size=int(getattr(args, "block_size", 0)
-                             or cfg.cache_block_size))
+                             or cfg.cache_block_size),
+        prefix_cache=(getattr(args, "prefix_cache", "off") == "on"))
     cfg.resolved_cache_layout        # validate the layout/family combo early
+    cfg.prefix_cache_enabled         # ...and the prefix-cache combo
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     policy = parse_policy(getattr(args, "quant_policy", None))
@@ -454,8 +574,10 @@ def build_server(args) -> Tuple[Server, object]:
             mode = f"psi{policy['default']}"
         cfg = dataclasses.replace(cfg, quant_mode=mode)
     # Cache extent must cover the *bucketed* prefill plus the decode budget,
-    # or the ring layout would silently drop the prompt head.
-    longest = args.prompt_len + args.prompt_jitter
+    # or the ring layout would silently drop the prompt head.  A shared
+    # system prompt prepends to every request's unique tail.
+    longest = (args.prompt_len + args.prompt_jitter
+               + getattr(args, "shared_prefix_len", 0))
     prompt_pad = -(-longest // PREFILL_BUCKET) * PREFILL_BUCKET
     mesh = parse_mesh_spec(getattr(args, "mesh", None))
     # Round the cache extent to the block grid for EVERY layout: a paged
@@ -478,7 +600,20 @@ def trace_from_args(args, cfg):
                          prompt_len=args.prompt_len,
                          max_new=args.max_new, min_new=args.min_new,
                          prompt_jitter=args.prompt_jitter,
+                         shared_prefix_len=getattr(args, "shared_prefix_len",
+                                                   0),
                          vocab_size=cfg.vocab_size, seed=args.seed)
+
+
+def _positive_rate(s: str) -> float:
+    """--arrival-rate parser: the trace generator divides by the rate, so 0
+    is a ZeroDivisionError waiting to happen and a negative rate would run
+    time backwards — reject both at the CLI boundary."""
+    v = float(s)
+    if not v > 0:
+        raise argparse.ArgumentTypeError(
+            f"--arrival-rate must be > 0 requests/s, got {s!r}")
+    return v
 
 
 def add_serve_args(ap: argparse.ArgumentParser) -> None:
@@ -497,9 +632,10 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=4,
                     help="decode slots (the fixed decode batch dimension)")
-    ap.add_argument("--arrival-rate", type=float, default=1000.0,
-                    help="Poisson arrival rate, requests/s (the reduced CPU "
-                         "model decodes ~3k tok/s, so this saturates it)")
+    ap.add_argument("--arrival-rate", type=_positive_rate, default=1000.0,
+                    help="Poisson arrival rate, requests/s, > 0 (the "
+                         "reduced CPU model decodes ~3k tok/s, so this "
+                         "saturates it)")
     ap.add_argument("--max-new", type=int, default=48,
                     help="per-request decode budgets are drawn from "
                          "[min-new, max-new]")
@@ -523,6 +659,18 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
                          "max_batch * ceil(max_seq / block_size); smaller "
                          "values trade capacity for memory and gate "
                          "admission on block availability)")
+    ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
+                    help="shared-prefix block reuse over the paged pool "
+                         "(DESIGN.md §3): admission serves the longest "
+                         "cached block-aligned prompt prefix out of "
+                         "ref-counted blocks and prefills only the suffix. "
+                         "Requires --cache-layout paged (the full-attention "
+                         "default).")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend ONE fixed random prefix of this many "
+                         "tokens to every prompt (the shared-system-prompt "
+                         "traffic shape; --prompt-len then sizes the "
+                         "unique tail)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="-1 disables EOS retirement")
     ap.add_argument("--seed", type=int, default=0)
@@ -549,6 +697,11 @@ def main():
         if stats["cache_layout"] == "paged":
             cache_info += (f" ({stats['n_blocks']}x{stats['block_size']} "
                            f"blocks, peak util {stats['block_util_pct']}%)")
+        if "prefix_cache" in stats:
+            pc = stats["prefix_cache"]
+            cache_info += (f" | prefix hit rate {pc['hit_rate']:.2f}, "
+                           f"{stats['prefix_tokens_reused']} tok reused / "
+                           f"{stats['prefilled_tokens']} prefilled")
         print(f"[{mode}] served {stats['n_requests']} requests: "
               f"{stats['tokens']} tokens in {stats['wall_s']:.3f}s = "
               f"{stats['tok_per_s']:.1f} tok/s | "

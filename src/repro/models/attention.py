@@ -134,12 +134,31 @@ def _project_qkv(p, x, cfg, positions):
     return q, k, v
 
 
-def attention_block(p, x, cfg, positions, *, causal=True):
-    """Training / prefill self-attention.  Returns (y, (k, v, k_pos))."""
+def attention_block(p, x, cfg, positions, *, causal=True, ctx=None):
+    """Training / prefill self-attention.  Returns (y, (k, v, k_pos)).
+
+    ``ctx`` (prefix-cache suffix prefill, DESIGN.md §3): an optional
+    ``{"k", "v": (B, P, Hkv, D)}`` dict of already-rotated context KV
+    covering absolute positions ``[0, P)`` — the shared prompt prefix
+    gathered from the paged pool.  ``positions`` then starts at ``P``
+    (``pos0``), queries attend over context + fresh keys with true
+    absolute positions (RoPE and the causal mask are position-driven, so
+    no other change is needed), and the returned state covers the fresh
+    suffix only — the context blocks already live in the pool.
+    """
     q, k, v = _project_qkv(p, x, cfg, positions)
     pos1d = positions[:, 0] if positions.ndim == 3 else positions
     window = cfg.window if cfg.attn_type == "swa" else 0
-    o = sdpa(q, k, v, pos1d, pos1d, causal=causal, window=window)
+    k_all, v_all, kpos_all = k, v, pos1d
+    if ctx is not None:
+        ck, cv = ctx["k"], ctx["v"]
+        cpos = jnp.broadcast_to(
+            jnp.arange(ck.shape[1], dtype=pos1d.dtype)[None],
+            (x.shape[0], ck.shape[1]))
+        k_all = jnp.concatenate([ck.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([cv.astype(v.dtype), v], axis=1)
+        kpos_all = jnp.concatenate([cpos, pos1d], axis=1)
+    o = sdpa(q, k_all, v_all, pos1d, kpos_all, causal=causal, window=window)
     B, S = x.shape[:2]
     y = linear(p["wo"], o.reshape(B, S, -1), cfg.quant_mode)
     return y, (k, v, pos1d)

@@ -85,6 +85,13 @@ def blocks_for(n_positions: int, block_size: int) -> int:
     return -(-int(n_positions) // int(block_size))
 
 
+def full_blocks(n_positions: int, block_size: int) -> int:
+    """Blocks COMPLETELY filled by ``n_positions`` rows (floor division) —
+    the shareable span of a prompt: only fully-populated, never-again-
+    written blocks may enter the prefix cache (DESIGN.md §3)."""
+    return int(n_positions) // int(block_size)
+
+
 def table_width(max_seq: int, block_size: int) -> int:
     """Block-table width ``n_bt``: logical blocks covering ``max_seq``."""
     return blocks_for(max_seq, block_size)

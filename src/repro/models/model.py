@@ -95,16 +95,21 @@ class Model:
         return linear(params["lm_head"], x, cfg.quant_mode)
 
     # ----------------------------------------------------------- full forward
-    def forward(self, params, batch, collect_cache=False):
+    def forward(self, params, batch, collect_cache=False, pos0=0,
+                ctx_kv=None):
+        """``pos0``/``ctx_kv`` (prefix-cache suffix prefill, DESIGN.md §3):
+        positions start at ``pos0`` (RoPE and the causal mask are driven by
+        absolute positions) and attention additionally sees the shared
+        prefix KV in ``ctx_kv`` covering ``[0, pos0)``."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
         enc_out = self._encode(params, batch) if cfg.family == "encdec" else None
         x = self._embed_tokens(params, tokens, batch)
-        positions = self._positions(batch, B, S)
+        positions = self._positions(batch, B, S, offset=pos0)
         x, states, aux = transformer.apply_decoder_stack(
             params["stack"], x, cfg, positions, enc_kv=enc_out,
-            collect_cache=collect_cache)
+            collect_cache=collect_cache, ctx_kv=ctx_kv)
         x = layers.apply_norm(params["norm_f"], x, cfg)
         logits = self._logits(params, x)
         return logits, states, aux, enc_out
@@ -176,7 +181,8 @@ class Model:
                 shr.cache_specs(cfg, mesh, cache), mesh))
         return cache
 
-    def prefill(self, params, batch, cache_len=None, true_lens=None):
+    def prefill(self, params, batch, cache_len=None, true_lens=None,
+                pos0=0, ctx_kv=None):
         """Forward the prompt, return (last-token logits, decode cache).
 
         The returned :class:`KVCache` is always DENSE layout — a
@@ -191,19 +197,39 @@ class Model:
         Only attention caches can be pad-masked post-hoc — recurrent
         (rg-lru / mamba) state absorbs pad tokens, so the engine prefills
         those families at exact lengths.
+
+        ``pos0``/``ctx_kv`` (prefix-cache SUFFIX prefill, DESIGN.md §3):
+        ``batch["tokens"]`` then holds only the uncached prompt suffix,
+        positions run ``[pos0, pos0 + S)`` so RoPE and the causal mask see
+        true positions, attention additionally reads the shared-prefix KV
+        in ``ctx_kv``, and the returned cache covers the suffix rows only
+        (``true_lens`` stays suffix-relative — it indexes the suffix
+        logits; the pad mask shifts by ``pos0`` internally).
         """
         cfg = self.cfg
         S = batch["tokens"].shape[1]
         cache_len = cache_len or S
         logits, states, _, enc_out = self.forward(params, batch,
-                                                  collect_cache=True)
+                                                  collect_cache=True,
+                                                  pos0=pos0, ctx_kv=ctx_kv)
         kv = _states_to_cache(cfg, states, S, cache_len)
         enc = enc_out if cfg.family == "encdec" else None
         if true_lens is None:
             return logits[:, -1], KVCache(kv, enc)
         B = logits.shape[0]
         last = logits[jnp.arange(B), true_lens - 1]
-        return last, KVCache(_mask_padded_kv(kv, true_lens), enc)
+        # k_pos entries are ABSOLUTE positions, so the pad threshold is
+        # pos0 + suffix true length
+        return last, KVCache(_mask_padded_kv(kv, true_lens + pos0), enc)
+
+    def gather_prefix_ctx(self, cache: KVCache, ctx_ids, dtype=jnp.bfloat16):
+        """Dense per-group context KV for the shared-prefix blocks
+        ``ctx_ids`` of a PAGED engine cache (the ``ctx_kv`` input of
+        :meth:`prefill`; DESIGN.md §3 "Prefix cache")."""
+        if not cache.paged:
+            raise ValueError("prefix context is gathered from a paged "
+                             "cache; this cache is dense")
+        return transformer.gather_paged_ctx(cache.kv, ctx_ids, dtype)
 
     def decode_step(self, params, batch, cache: KVCache, mesh=None):
         """batch: {"token": (B,1), "pos": (B,1) or "positions": (B,3,1),

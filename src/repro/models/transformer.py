@@ -45,12 +45,15 @@ def init_block(cfg, key, kind):
     return p
 
 
-def apply_block(p, x, cfg, kind, positions, enc_kv=None):
-    """Full-sequence (train / prefill) block.  Returns (x, state, aux)."""
+def apply_block(p, x, cfg, kind, positions, enc_kv=None, ctx=None):
+    """Full-sequence (train / prefill) block.  Returns (x, state, aux).
+    ``ctx`` is this block's prefix-cache context KV (attn blocks only;
+    see ``attention.attention_block``)."""
     h = layers.apply_norm(p["norm1"], x, cfg)
     state = None
     if kind in ("attn", "xattn"):
-        y, (k, v, k_pos) = attention.attention_block(p["attn"], h, cfg, positions)
+        y, (k, v, k_pos) = attention.attention_block(p["attn"], h, cfg,
+                                                     positions, ctx=ctx)
         state = {"k": k, "v": v, "k_pos": k_pos}
         x = x + y
         if kind == "xattn":
@@ -182,11 +185,12 @@ def init_decoder_stack(cfg, key):
     return {"groups": groups, "tail": tail}
 
 
-def _group_apply(gp, x, cfg, group_kinds, positions, enc_kv=None):
+def _group_apply(gp, x, cfg, group_kinds, positions, enc_kv=None, ctx=None):
     states, aux = {}, jnp.zeros((), jnp.float32)
     for i, kind in enumerate(group_kinds):
         x, st, a = apply_block(gp[f"b{i}_{kind}"], x, cfg, kind, positions,
-                               enc_kv)
+                               enc_kv,
+                               ctx=None if ctx is None else ctx[f"b{i}"])
         states[f"b{i}"] = st
         aux = aux + a
     return x, states, aux
@@ -204,27 +208,39 @@ def _constrain_act(x, cfg):
         x, P(bax, cfg.act_seq_axis, None))
 
 
-def apply_decoder_stack(p, x, cfg, positions, enc_kv=None, collect_cache=False):
-    """Returns (x, stacked_states_or_None, total_aux)."""
-    group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
+def apply_decoder_stack(p, x, cfg, positions, enc_kv=None, collect_cache=False,
+                        ctx_kv=None):
+    """Returns (x, stacked_states_or_None, total_aux).
 
-    def body(carry, gp):
+    ``ctx_kv`` (prefix-cache suffix prefill, DESIGN.md §3): a per-group
+    context-KV tree in the same ``{"b{i}": {"k", "v"}}`` stacked layout as
+    the decode cache (leading scanned-group axis), holding the shared
+    prefix gathered from the paged pool.  Only pure-attention stacks are
+    pageable, so the tail must be empty when it is supplied."""
+    group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
+    if ctx_kv is not None:
+        assert not tail_kinds, "prefix context needs a pure scanned stack"
+
+    def body(carry, xs):
+        gp, ctx = xs if ctx_kv is not None else (xs, None)
         x, aux = carry
         x = _constrain_act(x, cfg)
-        x, states, a = _group_apply(gp, x, cfg, group_kinds, positions, enc_kv)
+        x, states, a = _group_apply(gp, x, cfg, group_kinds, positions,
+                                    enc_kv, ctx=ctx)
         x = _constrain_act(x, cfg)
         return (x, aux + a), (states if collect_cache else 0)
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
+    scan_xs = (p["groups"] if ctx_kv is None else (p["groups"], ctx_kv))
     if cfg.scan_layers:
         (x, aux), states = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
-                                        p["groups"])
+                                        scan_xs)
     else:
         aux = jnp.zeros((), jnp.float32)
         collected = []
         for i in range(n_groups):
-            gp = jax.tree_util.tree_map(lambda a: a[i], p["groups"])
-            (x, aux), st = body_fn((x, aux), gp)
+            gxs = jax.tree_util.tree_map(lambda a: a[i], scan_xs)
+            (x, aux), st = body_fn((x, aux), gxs)
             collected.append(st)
         states = (jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *collected)
                   if collect_cache else None)
@@ -303,6 +319,38 @@ def init_paged_stack_cache(cfg, n_total, block_size, dtype=jnp.bfloat16):
     g = jax.tree_util.tree_map(
         lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), g)
     return (g, [])
+
+
+def gather_paged_ctx(cache, ctx_ids, dtype):
+    """Gather the shared-prefix blocks out of a paged stack cache as dense
+    per-group context KV for the suffix prefill (DESIGN.md §3 "Prefix
+    cache").
+
+    ``cache`` is the engine's paged ``(g_cache, [])`` stack; ``ctx_ids``
+    is ``(nctx,)`` int32 physical block ids covering absolute positions
+    ``[0, nctx * block_size)`` in logical order.  Returns a
+    ``{"b{i}": {"k", "v"}}`` tree of ``(G, 1, nctx*bs, Hkv, hd)`` arrays
+    (batch-1 — the fused single-admission prefill is the only prefix
+    path), int8 pools dequantized into ``dtype``.  ``nctx`` is static
+    (baked into the compiled shape); ``ctx_ids`` contents are traced."""
+    g_cache, tail = cache
+    assert not tail, "paged caches have a pure scanned stack"
+
+    def one(pool_dict):
+        def gather(pool):
+            got = pool[:, ctx_ids]               # (G, nctx, bs, Hkv, ·)
+            G, n, bs = got.shape[:3]
+            return got.reshape(G, 1, n * bs, *got.shape[3:])
+
+        if "k_scale" in pool_dict:
+            k = attention._kv_dequantize(gather(pool_dict["k"]),
+                                         gather(pool_dict["k_scale"]), dtype)
+            v = attention._kv_dequantize(gather(pool_dict["v"]),
+                                         gather(pool_dict["v_scale"]), dtype)
+            return {"k": k, "v": v}
+        return {"k": gather(pool_dict["k"]), "v": gather(pool_dict["v"])}
+
+    return {name: one(d) for name, d in g_cache.items()}
 
 
 def insert_paged_stack_cache(cache, seq_cache, block_row, scratch_block):

@@ -146,6 +146,15 @@ class Executor:
             self._prefill_insert = jax.jit(
                 self._prefill_insert_fn_paged, donate_argnums=(3,),
                 out_shardings=(tok_sh, self.cache_shardings))
+            # prefix-cache twin: gathers the shared-prefix blocks out of
+            # the (donated) pool as dense context KV, prefills only the
+            # suffix at positions [pos0, pos0+Sb), and scatters the suffix
+            # rows into the table's remaining blocks.  nctx is baked into
+            # the ctx_ids shape, so each (bucket, nctx) pair is one
+            # compiled executable; the decode step is untouched.
+            self._prefill_insert_prefix = jax.jit(
+                self._prefill_insert_fn_paged_prefix, donate_argnums=(3,),
+                out_shardings=(tok_sh, self.cache_shardings))
             self._insert_burst = jax.jit(
                 self._insert_burst_fn_paged, donate_argnums=(0,),
                 out_shardings=self.cache_shardings)
@@ -209,12 +218,15 @@ class Executor:
         return self.monitor.observe(step_times)
 
     # ------------------------------------------------------------ jitted fns
-    def _prefill_fn(self, params, tokens, true_lens):
+    def _prefill_fn(self, params, tokens, true_lens, pos0=0, ctx_kv=None):
         """(B, Sb) right-padded prompts -> (first greedy token (B,), cache).
 
         The per-sequence cache is always dense layout; paged executors
         prefill at the bucketed extent (the rows the insert scatters into
-        pool blocks), dense executors at ``max_seq`` (the slot extent)."""
+        pool blocks), dense executors at ``max_seq`` (the slot extent).
+        ``pos0``/``ctx_kv`` select the prefix-cache suffix prefill
+        (DESIGN.md §3): tokens are the uncached suffix, positions start at
+        ``pos0``, attention reads the shared prefix from ``ctx_kv``."""
         B, S = tokens.shape
         batch = {"tokens": tokens}
         if self.cfg.rope == "mrope":
@@ -225,7 +237,7 @@ class Executor:
                 (B, self.cfg.enc_frames, self.cfg.d_model), self.dtype)
         logits, cache = self.model.prefill(
             params, batch, cache_len=(None if self.paged else self.max_seq),
-            true_lens=true_lens)
+            true_lens=true_lens, pos0=pos0, ctx_kv=ctx_kv)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
     def _decode_fn(self, params, token, pos, active, cache):
@@ -264,6 +276,24 @@ class Executor:
         first, seq_cache = self._prefill_fn(params, tokens, true_lens)
         return first, self.model.insert_cache(cache, seq_cache, slot,
                                               block_row=block_row)
+
+    def _prefill_insert_fn_paged_prefix(self, params, tokens, true_lens,
+                                        cache, slot, block_row, ctx_ids):
+        """Prefix-cache suffix prefill (DESIGN.md §3): ``ctx_ids`` (nctx,)
+        names the shared-prefix pool blocks (absolute positions
+        ``[0, nctx*bs)``), ``tokens`` holds only the uncached suffix, and
+        ``block_row`` is the slot's FULL table row — the suffix rows
+        scatter into its entries from logical block ``nctx`` on.  Reading
+        the context out of ``cache`` before the insert writes it is safe
+        under donation (one jitted program)."""
+        nctx = ctx_ids.shape[0]                     # static, from the shape
+        pos0 = nctx * self.block_size
+        ctx_kv = (self.model.gather_prefix_ctx(cache, ctx_ids, self.dtype)
+                  if nctx else None)
+        first, seq_cache = self._prefill_fn(params, tokens, true_lens,
+                                            pos0=pos0, ctx_kv=ctx_kv)
+        return first, self.model.insert_cache(cache, seq_cache, slot,
+                                              block_row=block_row[nctx:])
 
     def _insert_burst_fn(self, cache, seq_cache, slots, valid):
         """Insert row i of ``seq_cache`` into slot ``slots[i]`` for every i
@@ -311,7 +341,17 @@ class Executor:
                              jnp.asarray(true_lens))
 
     def prefill_insert(self, tokens, true_lens, cache, slot: int,
-                       block_row=None):
+                       block_row=None, ctx_ids=None):
+        """Fused prefill + slot insert.  ``ctx_ids`` (prefix-cache mode,
+        paged only) routes to the suffix-prefill twin: pass the hit's
+        physical block ids — possibly empty, which compiles its own
+        nctx=0 shape but computes the identical graph — and ``tokens``
+        holding only the uncached suffix."""
+        if self.paged and ctx_ids is not None:
+            return self._prefill_insert_prefix(
+                self.params, jnp.asarray(tokens), jnp.asarray(true_lens),
+                cache, jnp.int32(slot), jnp.asarray(block_row),
+                jnp.asarray(ctx_ids, jnp.int32))
         if self.paged:
             return self._prefill_insert(self.params, jnp.asarray(tokens),
                                         jnp.asarray(true_lens), cache,
@@ -357,6 +397,9 @@ class Executor:
         warmup reachability test): burst prefill, fused prefill+insert,
         burst insert."""
         sz = lambda f: getattr(f, "_cache_size", lambda: -1)()
-        return {"prefill": sz(self._prefill),
-                "prefill_insert": sz(self._prefill_insert),
-                "insert_burst": sz(self._insert_burst)}
+        out = {"prefill": sz(self._prefill),
+               "prefill_insert": sz(self._prefill_insert),
+               "insert_burst": sz(self._insert_burst)}
+        if self.paged:
+            out["prefill_insert_prefix"] = sz(self._prefill_insert_prefix)
+        return out

@@ -1,0 +1,417 @@
+"""Prefix-cache subsystem tests (DESIGN.md §3 "Prefix cache"): refcounted
+BlockAllocator share/fork invariants, PrefixCache chain lookup / publish /
+LRU eviction, the serving-metrics satellite regressions, and the
+end-to-end shared-prefix acceptance (token-identical with the cache on vs
+off, measured hit rate, fewer prefilled tokens) on reduced qwen3-8b."""
+import dataclasses
+import json
+import random
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.launch.prefix_cache import PrefixCache
+from repro.launch.scheduler import (BlockAllocator, Request, poisson_trace,
+                                    summarize)
+from repro.launch.serve import Server, parse_mesh_spec
+from repro.models import build_model
+
+
+# ---------------------------------------------------------------------------
+# Refcounted BlockAllocator: share / fork invariants.
+# ---------------------------------------------------------------------------
+class TestRefcounts:
+    @given(st.integers(6, 40), st.integers(1, 4), st.integers(0, 10_000))
+    @settings(max_examples=40, deadline=None)
+    def test_share_churn_invariants(self, n_blocks, n_shards, seed):
+        """Random alloc/attach/pin/release interleavings: a block with
+        references remaining is never freed, ``free + in_use == n_blocks``
+        holds counting shared blocks ONCE, and releasing every request and
+        pin restores the exact initial free set."""
+        alloc = BlockAllocator(n_blocks, n_shards=n_shards)
+        initial_free = sorted(b for pool in alloc._free for b in pool)
+        rng = random.Random(seed)
+        live = {}                                  # rid -> referenced blocks
+        pinned = []                                # cache-style pins
+        for rid in range(rng.randint(2, 25)):
+            if live and rng.random() < 0.35:
+                victim = rng.choice(list(live))
+                survivors = [b for b in live.pop(victim)
+                             if alloc.refcount[b] > 1]
+                alloc.release(victim)
+                for b in survivors:               # refs remaining -> alive
+                    assert alloc.refcount[b] >= 1
+                    assert b not in [x for p in alloc._free for x in p]
+            need = rng.randint(1, max(1, n_blocks // 3))
+            if not alloc.can_reserve(need):
+                continue
+            mine = []
+            # attach a shared run first (logical order), maybe
+            sharable = [b for bs_ in live.values() for b in bs_] + pinned
+            if sharable and rng.random() < 0.5:
+                share = rng.sample(sharable, rng.randint(1, len(sharable)))
+                share = list(dict.fromkeys(share))
+                alloc.attach(rid, share)
+                mine += share
+            alloc.reserve(rid, need)
+            for _ in range(rng.randint(0, need)):
+                blk = alloc.alloc(rid)
+                assert alloc.refcount[blk] == 1    # exclusive at birth
+                mine.append(blk)
+                if rng.random() < 0.3:             # cache publishes it
+                    alloc.ref_block(blk)
+                    pinned.append(blk)
+            live[rid] = mine
+            assert alloc.free_count + alloc.in_use == n_blocks
+            # shared blocks count once: in_use == distinct referenced ids
+            referenced = {b for bs_ in live.values() for b in bs_} | set(pinned)
+            assert alloc.in_use == len(referenced)
+        for rid in list(live):
+            alloc.release(rid)
+        for b in pinned:
+            alloc.unref_block(b)
+        assert alloc.free_count == n_blocks
+        assert all(r == 0 for r in alloc.refcount)
+        assert sorted(b for pool in alloc._free for b in pool) == initial_free
+        assert all(o is None for o in alloc.owner)
+
+    def test_release_never_frees_shared_block(self):
+        alloc = BlockAllocator(4)
+        alloc.reserve(1, 2)
+        b0, b1 = alloc.alloc(1), alloc.alloc(1)
+        alloc.ref_block(b0)                        # cache pin
+        alloc.release(1)
+        assert alloc.refcount[b0] == 1             # pinned -> alive
+        assert alloc.refcount[b1] == 0             # exclusive -> freed
+        assert alloc.free_count == 3
+        assert alloc.unref_block(b0)               # last ref frees
+        assert alloc.free_count == 4
+
+    def test_attach_requires_populated_block(self):
+        alloc = BlockAllocator(4)
+        with pytest.raises(ValueError, match="free block"):
+            alloc.attach(1, [0])
+        with pytest.raises(ValueError, match="free block"):
+            alloc.ref_block(0)
+
+    def test_fork_cow_semantics(self):
+        """COW fork: an exclusive block forks to itself; a shared block is
+        swapped for a fresh exclusive one (old refs intact, reservation
+        drawn down, logical position preserved)."""
+        alloc = BlockAllocator(6)
+        alloc.reserve(1, 2)
+        b0, b1 = alloc.alloc(1), alloc.alloc(1)
+        alloc.reserve(2, 1)
+        alloc.attach(2, [b0, b1])
+        assert alloc.is_shared(b0) and alloc.is_shared(b1)
+        new = alloc.fork(2, b1)                    # shared -> copy
+        assert new not in (b0, b1)
+        assert alloc.refcount[b1] == 1 and alloc.refcount[new] == 1
+        assert alloc.owned_by(2) == [b0, new]      # order preserved
+        with pytest.raises(ValueError, match="beyond its reservation"):
+            alloc.fork(2, b0)                      # shared, budget spent
+        alloc.release(1)
+        alloc.release(2)
+        assert alloc.free_count == 6
+
+    def test_fork_exclusive_is_identity(self):
+        alloc = BlockAllocator(4)
+        alloc.reserve(1, 2)
+        b0 = alloc.alloc(1)
+        assert alloc.fork(1, b0) == b0
+        assert alloc._reserved[1] == 1             # no budget consumed
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: hash chains, publish, LRU eviction.
+# ---------------------------------------------------------------------------
+def _tok(*vals):
+    return np.asarray(vals, np.int32)
+
+
+class TestPrefixCache:
+    def _published(self, alloc, pc, prompt, rid, tail=1):
+        """Simulate a retiring request: ``nfull`` publishable prompt
+        blocks plus ``tail`` decode/partial blocks that free at release."""
+        nfull = len(prompt) // pc.block_size
+        alloc.reserve(rid, nfull + tail)
+        held = [alloc.alloc(rid) for _ in range(nfull + tail)]
+        pc.publish(prompt, held, alloc)
+        alloc.release(rid)
+        return held
+
+    def test_block_aligned_chain_lookup(self):
+        alloc = BlockAllocator(16)
+        pc = PrefixCache(4)
+        prompt = np.arange(10, dtype=np.int32)      # 2 full blocks + tail
+        held = self._published(alloc, pc, prompt, rid=1)
+        assert len(pc) == 2                         # only full blocks enter
+        # identical prompt: both full blocks hit (suffix 10-8=2 remains)
+        assert pc.lookup(prompt) == held[:2]
+        # diverging second block: only the first chains
+        other = prompt.copy()
+        other[5] = 99
+        assert pc.lookup(other) == held[:1]
+        # block-aligned prompt: hit capped to leave >=1 suffix token
+        assert pc.lookup(prompt[:8]) == held[:1]
+        # too short to cover any full block + 1
+        assert pc.lookup(prompt[:4]) == []
+
+    def test_publish_dedups_first_wins(self):
+        alloc = BlockAllocator(16)
+        pc = PrefixCache(4)
+        prompt = np.arange(8, dtype=np.int32)
+        held_a = self._published(alloc, pc, prompt, rid=1)
+        held_b = self._published(alloc, pc, prompt, rid=2)
+        assert pc.lookup(np.arange(9, dtype=np.int32)) == held_a[:2]
+        assert held_b[0] != held_a[0] or alloc.refcount[held_b[0]] == 0
+
+    def test_lru_eviction_restores_initial_free_set(self):
+        """Publish until the pool is full of cached blocks, evict under
+        pressure (LRU order, unreferenced entries only), then drain: the
+        allocator must return to its EXACT initial free set."""
+        alloc = BlockAllocator(8)
+        initial_free = sorted(b for pool in alloc._free for b in pool)
+        pc = PrefixCache(2)
+        for rid in range(4):                        # 4 prompts x 2 blocks
+            prompt = _tok(rid * 10, rid * 10 + 1, rid * 10 + 2,
+                          rid * 10 + 3)
+            self._published(alloc, pc, prompt, rid, tail=0)
+        # publishes pinned blocks; nothing free beyond the +1 tails
+        assert alloc.in_use == 8
+        assert len(pc) == 8
+        # touch rid 0's entries so rid 1's become LRU victims
+        pc.lookup(_tok(0, 1, 2, 3, 4))
+        evicted = pc.evict_until(alloc, need=2)
+        assert evicted == 2
+        assert alloc.can_reserve(2)
+        # rid 1's chain is gone, rid 0's survives
+        assert pc.lookup(_tok(10, 11, 12, 13, 14)) == []
+        assert len(pc.lookup(_tok(0, 1, 2, 3, 4))) == 2
+        pc.drain(alloc)
+        assert len(pc) == 0
+        assert sorted(b for pool in alloc._free for b in pool) == initial_free
+        assert all(r == 0 for r in alloc.refcount)
+
+    def test_eviction_takes_leaves_before_roots(self):
+        """Regression: LRU order within a chain must be deepest-first —
+        evicting a chain ROOT would orphan its still-pinned descendants
+        (unreachable entries holding pool blocks).  One eviction from a
+        4-block chain must remove the deepest entry, leaving a working
+        3-block hit."""
+        alloc = BlockAllocator(8)
+        pc = PrefixCache(2)
+        prompt = np.arange(8, dtype=np.int32)       # 4 full blocks
+        held = self._published(alloc, pc, prompt, rid=1, tail=0)
+        assert pc.evict_until(alloc, need=5) == 1
+        assert pc.lookup(np.arange(9, dtype=np.int32)) == held[:3]
+        # same after a lookup re-touches the chain
+        assert pc.evict_until(alloc, need=6) == 1
+        assert pc.lookup(np.arange(9, dtype=np.int32)) == held[:2]
+
+    def test_eviction_skips_referenced_entries(self):
+        alloc = BlockAllocator(4)
+        pc = PrefixCache(2)
+        held = self._published(alloc, pc, _tok(1, 2, 3, 4), rid=1)
+        alloc.reserve(2, 1)
+        alloc.attach(2, held[:2])                   # live request shares
+        assert pc.evict_until(alloc, need=4) == 0   # nothing evictable
+        alloc.release(2)
+        assert pc.evict_until(alloc, need=4) == 2   # now it drains
+
+
+# ---------------------------------------------------------------------------
+# Serving-metrics satellite regressions.
+# ---------------------------------------------------------------------------
+class TestMetricsRegressions:
+    def test_summarize_zero_wall_is_strict_json(self):
+        """wall_s == 0 used to yield tok_per_s = inf -> json.dump writes
+        bare ``Infinity`` -> invalid JSON for strict parsers."""
+        r = Request(rid=0, prompt=np.zeros((4,), np.int32), max_new=4)
+        r.tokens = [1, 2]
+        stats = summarize([r], wall_s=0.0)
+        assert stats["tok_per_s"] == 0.0
+        strict = lambda c: (_ for _ in ()).throw(
+            ValueError(f"non-finite constant {c}"))
+        json.loads(json.dumps(stats), parse_constant=strict)
+
+    def test_poisson_trace_rejects_nonpositive_rate(self):
+        for bad in (0, 0.0, -3.0):
+            with pytest.raises(ValueError, match="rate_rps must be > 0"):
+                poisson_trace(4, rate_rps=bad, prompt_len=4, max_new=4,
+                              vocab_size=16)
+
+    def test_poisson_trace_shared_prefix(self):
+        tr = poisson_trace(6, rate_rps=10, prompt_len=8, max_new=4,
+                           vocab_size=64, shared_prefix_len=32, seed=1)
+        assert all(len(r.prompt) == 40 for r in tr)
+        head = tr[0].prompt[:32]
+        assert all((r.prompt[:32] == head).all() for r in tr)
+        tails = {tuple(r.prompt[32:]) for r in tr}
+        assert len(tails) > 1                       # unique tails
+
+    def test_mesh_spec_malformed_message(self):
+        for bad in ("8", "2x2x2", "axb", "4x"):
+            with pytest.raises(ValueError, match="DATAxMODEL"):
+                parse_mesh_spec(bad)
+        assert parse_mesh_spec(None) is None
+        assert parse_mesh_spec("1x1") is None
+
+
+# ---------------------------------------------------------------------------
+# End-to-end shared-prefix serving (reduced qwen3-8b).
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def qwen_setup():
+    cfg = reduced_config(get_config("qwen3-8b"))
+    model = build_model(cfg)
+    params = model.quantize(model.init(jax.random.PRNGKey(0)), 8)
+    cfg = dataclasses.replace(cfg, quant_mode="psi8")
+    return cfg, params
+
+
+def _shared_trace(cfg, n=8, prefix_len=64, tail_len=8, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, size=(prefix_len,)) \
+        .astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, cfg.vocab_size, size=(tail_len,)) \
+            .astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([shared, tail]),
+                            max_new=2 + i % 4, arrival_s=0.001 * i))
+    return reqs
+
+
+class TestPrefixServing:
+    def test_token_identical_on_vs_off_with_measured_hits(self, qwen_setup):
+        """Acceptance: a 64-token shared prefix / 8-token unique tails
+        trace serves token-identically with the prefix cache on vs off,
+        with hit rate > 0, strictly fewer mean prefilled tokens, the
+        decode step still compiling exactly once, and the allocator (LRU
+        drained) back to its initial free count."""
+        cfg, params = qwen_setup
+        off = Server(cfg, params, max_batch=2, max_seq=96)
+        on = Server(dataclasses.replace(cfg, prefix_cache=True), params,
+                    max_batch=2, max_seq=96)
+        assert on.prefix_enabled and not off.prefix_enabled
+        done_off, stat_off = off.serve(_shared_trace(cfg), continuous=True)
+        done_on, stat_on = on.serve(_shared_trace(cfg), continuous=True)
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+        assert toks(done_off) == toks(done_on)
+        pc = stat_on["prefix_cache"]
+        assert pc["hit_rate"] > 0 and pc["hits"] > 0
+        assert stat_on["prefix_tokens_reused"] > 0
+        assert (stat_on["prefilled_tokens_mean"]
+                < stat_off["prefilled_tokens_mean"])
+        assert stat_on["decode_compiles"] == 1
+        assert stat_off["decode_compiles"] == 1
+        assert stat_on["blocks_free_end"] == stat_on["n_blocks"]
+
+    def test_prefix_cache_requires_paged_and_rope(self, qwen_setup):
+        cfg, params = qwen_setup
+        dense = dataclasses.replace(cfg, cache_layout="dense",
+                                    prefix_cache=True)
+        with pytest.raises(ValueError, match="paged"):
+            Server(dense, params, max_batch=2, max_seq=64)
+        with pytest.raises(ValueError, match="RoPE"):
+            dataclasses.replace(cfg, rope="sinusoidal",
+                                prefix_cache=True).prefix_cache_enabled
+
+    def test_static_mode_token_identical(self, qwen_setup):
+        """Batch-synchronous scheduling under the prefix cache stays
+        token-identical to continuous (and to prefix-off)."""
+        cfg, params = qwen_setup
+        on = Server(dataclasses.replace(cfg, prefix_cache=True), params,
+                    max_batch=2, max_seq=96)
+        done_c, _ = on.serve(_shared_trace(cfg, n=6), continuous=True)
+        done_s, stat_s = on.serve(_shared_trace(cfg, n=6), continuous=False)
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+        assert toks(done_c) == toks(done_s)
+        assert stat_s["blocks_free_end"] == stat_s["n_blocks"]
+
+    @pytest.mark.skipif(len(jax.devices()) < 8,
+                        reason="needs 8 devices (CI distributed leg forces "
+                               "--xla_force_host_platform_device_count=8)")
+    def test_sharded_mesh_token_identical(self, qwen_setup):
+        """Prefix-cached serving on a (4,2) mesh (slots and blocks
+        partitioned over the data axis, shared blocks gathered across
+        shards for the suffix prefill) emits exactly the single-device
+        tokens, decode still compiling once."""
+        from repro.launch.serve import parse_mesh_spec
+        cfg, params = qwen_setup
+        pcfg = dataclasses.replace(cfg, prefix_cache=True)
+        single = Server(pcfg, params, max_batch=4, max_seq=96)
+        meshed = Server(pcfg, params, max_batch=4, max_seq=96,
+                        mesh=parse_mesh_spec("4x2"))
+        d1, _ = single.serve(_shared_trace(cfg, n=8), continuous=True)
+        d8, s8 = meshed.serve(_shared_trace(cfg, n=8), continuous=True)
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+        assert toks(d1) == toks(d8)
+        assert s8["prefix_cache"]["hit_rate"] > 0
+        assert s8["decode_compiles"] == 1
+        assert s8["slot_shards"] == 4
+        assert s8["blocks_free_end"] == s8["n_blocks"]
+
+    def test_bucket_misaligned_block_size(self, qwen_setup):
+        """Regression: with block_size=8 (not a multiple of the 16-token
+        prefill bucket) a 9-block hit put pos0=72 off the bucket grid and
+        the suffix bucket over-allocated past the admission reservation
+        ('allocating beyond its reservation' mid-serve).  Hits are now
+        trimmed to the bucket grid (PrefixCache align_tokens), and output
+        stays token-identical to prefix-off."""
+        cfg, params = qwen_setup
+        cfg8 = dataclasses.replace(cfg, cache_block_size=8)
+        rng = np.random.default_rng(0)
+        shared = rng.integers(0, cfg8.vocab_size, size=(72,)) \
+            .astype(np.int32)
+
+        def mk():
+            r2 = np.random.default_rng(3)
+            return [Request(rid=i, prompt=np.concatenate(
+                        [shared, r2.integers(0, cfg8.vocab_size, size=(4,))
+                         .astype(np.int32)]),
+                        max_new=1, arrival_s=0.001 * i) for i in range(4)]
+
+        off = Server(cfg8, params, max_batch=2, max_seq=96)
+        on = Server(dataclasses.replace(cfg8, prefix_cache=True), params,
+                    max_batch=2, max_seq=96)
+        d_off, _ = off.serve(mk(), continuous=True)
+        on.warmup(mk(), verbose=False)
+        n0 = on.executor.prefill_cache_sizes()["prefill_insert_prefix"]
+        d_on, s_on = on.serve(mk(), continuous=True, warmup=False)
+        # warmup's deepest-hit depth mirrors the cache's alignment trim,
+        # so the serve itself compiles no new prefix-prefill shapes
+        n1 = on.executor.prefill_cache_sizes()["prefill_insert_prefix"]
+        if n0 != -1:
+            assert n1 == n0
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+        assert toks(d_off) == toks(d_on)
+        assert s_on["prefix_cache"]["hit_rate"] > 0
+        # hit depth trimmed to the bucket grid: 8 blocks = 64 tokens, not 9
+        assert s_on["prefix_cache"]["tokens_reused"] % 16 == 0
+        assert s_on["blocks_free_end"] == s_on["n_blocks"]
+
+    def test_eviction_pressure_under_distinct_prompts(self, qwen_setup):
+        """DISTINCT 72-token prompts through a pool barely larger than one
+        request's worst case: every retirement publishes 4 blocks the next
+        admission cannot share, so the LRU must evict under reservation
+        pressure; all requests still complete and the end state is
+        leak-free."""
+        cfg, params = qwen_setup
+        rng = np.random.default_rng(7)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, size=(72,))
+                        .astype(np.int32),
+                        max_new=3, arrival_s=0.001 * i) for i in range(5)]
+        on = Server(dataclasses.replace(cfg, prefix_cache=True), params,
+                    max_batch=2, max_seq=96, n_blocks=7)
+        done, stats = on.serve(reqs, continuous=True)
+        assert stats["n_requests"] == 5
+        assert all(len(r.tokens) == r.max_new for r in done)
+        assert stats["prefix_cache"]["evicted_blocks"] > 0
+        assert stats["prefix_cache"]["hit_rate"] == 0.0
+        assert stats["blocks_free_end"] == 7
