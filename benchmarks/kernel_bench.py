@@ -1,5 +1,6 @@
-"""Microbenchmark of the psi_matmul kernels (CPU oracle path timing + the
-analytic HBM-traffic advantage that is the kernel's reason to exist).
+"""Microbenchmark of the psi_matmul + paged-attention kernels (CPU oracle
+path timing + the analytic HBM-traffic advantage that is each kernel's
+reason to exist).
 
 Wall-times here are CPU-oracle numbers (the container has no TPU); the
 roofline-relevant quantities are analytic: the weight-byte column (bf16
@@ -7,9 +8,20 @@ roofline-relevant quantities are analytic: the weight-byte column (bf16
 sweep (M in {1, 4, 8, 16} = active slots), the padded-MAC count the
 small-M tile dispatch (``psi_matmul.pick_bm``) issues versus the fixed
 128-row tile it replaced.
+
+The paged-decode sweep (B x n_bt x {bf16, int8} pools) reports, per
+config, the bytes of dense gathered/dequantized temporaries the old read
+path materialized per decode step per layer (``gathered_bytes_eliminated``
+— the fused kernel's win), the pool bytes the kernel streams instead, the
+oracle-vs-gather agreement, and (with ``--kernel-check``, the CI
+kernel-bench leg) the interpret-mode Pallas kernel's max error against the
+oracle.  ``python -m benchmarks.kernel_bench --out BENCH_kernel.json``
+writes the machine-readable artifact CI asserts on.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -17,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import psi
+from repro.kernels import paged_attention as pa
 from repro.kernels import psi_matmul as pk
 from repro.kernels import ref
 
@@ -29,6 +42,94 @@ def _time(fn, *args, iters=5):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.time() - t0) / iters * 1e6
+
+
+# paged-decode sweep geometry (reduced-config-scale heads, serving-scale
+# block size); the traffic model is per decode step per layer.
+PAGED_BS, PAGED_HQ, PAGED_HKV, PAGED_HD = 16, 8, 2, 64
+
+
+def _paged_case(rng, B, n_bt, quantized):
+    bs, hq, hkv, hd = PAGED_BS, PAGED_HQ, PAGED_HKV, PAGED_HD
+    N = B * n_bt + B                                   # + per-slot scratch
+    q = jnp.asarray(rng.normal(size=(B, hq, hd)), jnp.bfloat16)
+    if quantized:
+        kp = jnp.asarray(rng.integers(-127, 128, size=(N, bs, hkv, hd)),
+                         jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, size=(N, bs, hkv, hd)),
+                         jnp.int8)
+        ks = jnp.asarray(rng.uniform(1e-3, 0.05, size=(N, bs, hkv, 1)),
+                         jnp.float32)
+        vs = jnp.asarray(rng.uniform(1e-3, 0.05, size=(N, bs, hkv, 1)),
+                         jnp.float32)
+    else:
+        kp = jnp.asarray(rng.normal(size=(N, bs, hkv, hd)), jnp.bfloat16)
+        vp = jnp.asarray(rng.normal(size=(N, bs, hkv, hd)), jnp.bfloat16)
+        ks = vs = None
+    # permuted physical blocks, fully allocated, full-length decode (the
+    # worst-case gather the kernel eliminates)
+    bt = jnp.asarray(rng.permutation(B * n_bt).reshape(B, n_bt), jnp.int32)
+    pos = jnp.full((B,), n_bt * bs - 1, jnp.int32)
+    return q, kp, vp, bt, pos, ks, vs
+
+
+def paged_sweep(kernel_check=False):
+    """B x n_bt x pool-dtype sweep of the paged-decode read side.  Returns
+    (csv_rows, json_records)."""
+    rows, records = [], []
+    bs, hkv, hd = PAGED_BS, PAGED_HKV, PAGED_HD
+    print("paged-decode read side (CPU oracle vs dense gather; bytes = "
+          "dense temporaries the fused kernel eliminates per step/layer):")
+    for quantized in (False, True):
+        pool = "int8" if quantized else "bf16"
+        for n_bt in (4, 16, 64):
+            for B in (1, 4, 8, 16):
+                rng = np.random.default_rng(hash((B, n_bt, quantized))
+                                            % 2 ** 31)
+                args = _paged_case(rng, B, n_bt, quantized)
+                t_ref = _time(pa.paged_attention_ref, *args)
+                t_gat = _time(pa.paged_attention_gather, *args)
+                o_ref = np.asarray(pa.paged_attention_ref(*args), np.float32)
+                o_gat = np.asarray(pa.paged_attention_gather(*args),
+                                   np.float32)
+                max_err = float(np.abs(o_ref - o_gat).max())
+                # greedy-proxy token identity: per slot, the argmax over the
+                # flattened head output must agree between the engine's
+                # routed oracle and the pre-kernel gather math
+                tok_ok = bool((o_ref.reshape(B, -1).argmax(-1)
+                               == o_gat.reshape(B, -1).argmax(-1)).all())
+                kerr = None
+                if kernel_check and B * n_bt <= 64:     # bounded interpret
+                    o_ker = np.asarray(pa.paged_attention_pallas(
+                        *args, interpret=True), np.float32)
+                    kerr = float(np.abs(o_ker - o_ref).max())
+                elim = pa.gathered_bytes(B, n_bt, bs, hkv, hd,
+                                         quantized=quantized)
+                stream = pa.streamed_bytes(B * n_bt, bs, hkv, hd,
+                                           quantized=quantized)
+                name = f"paged_decode_{pool}_B{B}_nbt{n_bt}"
+                print(f"  {pool} B={B:<3d} n_bt={n_bt:<3d} "
+                      f"oracle {t_ref:7.0f} us  gather {t_gat:7.0f} us  "
+                      f"eliminated {elim / 1e3:8.1f} KB  "
+                      f"streamed {stream / 1e3:8.1f} KB"
+                      + (f"  kernel_err {kerr:.3g}" if kerr is not None
+                         else ""))
+                rows.append((name, t_ref,
+                             f"gathered_bytes_eliminated={elim};"
+                             f"streamed_bytes={stream};"
+                             f"token_identical={tok_ok}"))
+                records.append({
+                    "name": name, "B": B, "n_bt": n_bt, "pool": pool,
+                    "block_size": bs, "n_kv": hkv, "head_dim": hd,
+                    "t_oracle_us": round(t_ref, 1),
+                    "t_gather_us": round(t_gat, 1),
+                    "gathered_bytes_eliminated": elim,
+                    "streamed_bytes": stream,
+                    "oracle_gather_max_err": max_err,
+                    "token_identical": tok_ok,
+                    "kernel_vs_oracle_max_err": kerr,
+                })
+    return rows, records
 
 
 def run():
@@ -76,8 +177,32 @@ def run():
         rows.append((f"kernel_decode_m{M}", t_m,
                      f"bm={bm};padded_macs={macs_new};"
                      f"macs_vs_128tile={ratio:.1f}x"))
+
+    # paged-decode read-side sweep (no interpret-mode kernel check here to
+    # keep `python -m benchmarks.run` fast; the CI kernel-bench leg runs
+    # `-m benchmarks.kernel_bench --kernel-check --out BENCH_kernel.json`)
+    prows, _ = paged_sweep(kernel_check=False)
+    rows.extend(prows)
     return rows
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="write the paged-decode sweep as machine-readable "
+                         "JSON (BENCH_kernel.json)")
+    ap.add_argument("--kernel-check", action="store_true",
+                    help="also run the interpret-mode Pallas kernel against "
+                         "the oracle on the bounded-size configs")
+    args = ap.parse_args(argv)
+    if args.out is None:
+        run()
+        return
+    _, records = paged_sweep(kernel_check=args.kernel_check)
+    with open(args.out, "w") as f:
+        json.dump({"rows": records}, f, indent=1)
+    print(f"wrote {args.out}: {len(records)} paged-decode configs")
+
+
 if __name__ == "__main__":
-    run()
+    main()

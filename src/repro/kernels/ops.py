@@ -23,6 +23,12 @@ Decode-shaped dispatch (DESIGN.md §2): the M-tile follows the actual row
 count (``psi_matmul.pick_bm``), so a decode step over <=16 slots stops
 padding M up to the 128-row MXU tile (8-16x fewer padded MACs per GEMV;
 tracked by ``benchmarks/kernel_bench.py``).
+
+:func:`paged_decode_attention` applies the same contract to the paged
+decode read side (DESIGN.md §3 "Paged-decode kernel"): tpu -> the fused
+flash-decode Pallas kernel in ``repro.kernels.paged_attention`` (no dense
+gathered temporary), gpu -> its dense-gather fast path, cpu -> its
+pure-XLA oracle; ``REPRO_PAGED_ATTN`` force-overrides the route by name.
 """
 from __future__ import annotations
 
@@ -32,10 +38,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import psi
+from repro.kernels import paged_attention as _pa
 from repro.kernels import psi_matmul as _pk
 from repro.kernels import ref as _ref
 
 _GPU_BACKENDS = ("gpu", "cuda", "rocm")
+_PAGED_ROUTES = ("pallas", "gather", "ref", "interpret")
 
 
 def _backend() -> str:
@@ -85,3 +93,53 @@ def psi_matmul(x: jnp.ndarray, qt: psi.QuantizedTensor) -> jnp.ndarray:
     K = x.shape[-1]
     y = psi_matmul_2d(x.reshape(-1, K), qt)
     return y.reshape(*lead, y.shape[-1])
+
+
+def paged_attn_route() -> str:
+    """Resolved backend route for the paged-decode attention read side.
+
+    Same explicit contract as :func:`psi_matmul_2d` — tpu -> the Pallas
+    flash-decode kernel, gpu -> the dense-gather fast path, cpu -> the
+    pure-XLA oracle (the token-identity reference); ``REPRO_FORCE_INTERPRET``
+    routes through ``pallas_call(interpret=True)``.  ``REPRO_PAGED_ATTN``
+    overrides the route by name (``pallas`` / ``gather`` / ``ref`` /
+    ``interpret``); an unknown name fails loudly rather than silently
+    falling through."""
+    env = os.environ.get("REPRO_PAGED_ATTN", "auto")
+    if env != "auto":
+        if env not in _PAGED_ROUTES:
+            raise ValueError(
+                f"REPRO_PAGED_ATTN={env!r}: expected one of "
+                f"{('auto',) + _PAGED_ROUTES}")
+        return env
+    if _use_pallas():
+        return "pallas"
+    if _use_gpu_fast_path():
+        return "gather"
+    if _force_interpret():
+        return "interpret"
+    return "ref"
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, pos,
+                           k_scale=None, v_scale=None):
+    """Routed paged-decode attention read side (no gathered temporary on
+    TPU; DESIGN.md §3 "Paged-decode kernel").
+
+    q (B, Hq, D); k/v pools (N, bs, Hkv, D) (int8 codes plus per-entry
+    ``k_scale``/``v_scale`` (N, bs, Hkv, 1) f32 under ``kv_quant="int8"``);
+    block_tables (B, n_bt) int32 (−1 = unallocated); pos (B,) absolute
+    query positions.  Returns (B, Hq, D)."""
+    route = paged_attn_route()
+    if route == "pallas":
+        return _pa.paged_attention_pallas(q, k_pool, v_pool, block_tables,
+                                          pos, k_scale, v_scale)
+    if route == "gather":
+        return _pa.paged_attention_gather(q, k_pool, v_pool, block_tables,
+                                          pos, k_scale, v_scale)
+    if route == "interpret":
+        return _pa.paged_attention_pallas(q, k_pool, v_pool, block_tables,
+                                          pos, k_scale, v_scale,
+                                          interpret=True)
+    return _pa.paged_attention_ref(q, k_pool, v_pool, block_tables, pos,
+                                   k_scale, v_scale)

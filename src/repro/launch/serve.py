@@ -530,6 +530,7 @@ class Server:
         if self.paged:
             stats["block_size"] = self.block_size
             stats["n_blocks"] = ex.n_blocks
+            stats["paged_attn_route"] = ex.paged_attn_route
             stats["peak_blocks_in_use"] = blocks.high_watermark
             stats["block_util_pct"] = round(
                 100.0 * blocks.high_watermark / max(ex.n_blocks, 1), 1)
@@ -696,7 +697,8 @@ def main():
         cache_info = f"cache {stats['cache_layout']}"
         if stats["cache_layout"] == "paged":
             cache_info += (f" ({stats['n_blocks']}x{stats['block_size']} "
-                           f"blocks, peak util {stats['block_util_pct']}%)")
+                           f"blocks, {stats['paged_attn_route']} read, "
+                           f"peak util {stats['block_util_pct']}%)")
         if "prefix_cache" in stats:
             pc = stats["prefix_cache"]
             cache_info += (f" | prefix hit rate {pc['hit_rate']:.2f}, "

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models import layers
 from repro.quant import linear
 
@@ -260,12 +261,15 @@ def paged_decode_attention_block(p, x, cfg, positions, cache, block_tables,
     allocated (and unique to this slot) before the step runs.
 
     The new token's KV is scattered to (block_tables[b, pos//bs], pos%bs);
-    inactive or table-less slots write to their own scratch block instead
-    (distinct destinations, so the masked-decode contract needs no
-    read-modify-write).  The read side gathers each slot's blocks back into
-    a (B, n_bt*bs, ...) view and *synthesizes* key positions from the
+    inactive, table-less, or table-overflowing slots (pos//bs >= n_bt)
+    write to their own scratch block instead (distinct destinations, so
+    the masked-decode contract needs no read-modify-write).  The read side
+    goes through the routed flash-decode kernel
+    (``ops.paged_decode_attention``): pool blocks are streamed one
+    block-table entry at a time with key positions *synthesized* from the
     table (logical block j, offset o -> j*bs + o; unallocated -> -1), so
-    stale pool contents past ``pos`` are causally masked — no stored k_pos.
+    stale pool contents past ``pos`` are causally masked — no stored
+    k_pos, and on TPU no dense gathered temporary (DESIGN.md §3).
     """
     q, k_new, v_new = _project_qkv(p, x, cfg, positions)
     pos1d = positions[:, 0] if positions.ndim == 3 else positions   # (B,1)
@@ -273,10 +277,15 @@ def paged_decode_attention_block(p, x, cfg, positions, cache, block_tables,
     N, bs = cache["k"].shape[0], cache["k"].shape[1]
     n_bt = block_tables.shape[1]
     pos = pos1d[:, 0]                                               # (B,)
-    li = jnp.clip(pos // bs, 0, n_bt - 1)
+    li = pos // bs
     off = pos % bs
-    pb = jnp.take_along_axis(block_tables, li[:, None], axis=1)[:, 0]
-    ok = pb >= 0
+    # a position past the table's extent must NOT clamp to the last logical
+    # block — that would scatter into a physical block owned by another
+    # token.  Overflow routes to the slot's scratch block like pb < 0.
+    in_range = li < n_bt
+    pb = jnp.take_along_axis(block_tables, jnp.minimum(li, n_bt - 1)[:, None],
+                             axis=1)[:, 0]
+    ok = (pb >= 0) & in_range
     if active is not None:
         ok = ok & active
     dest = jnp.where(ok, pb, N - B + jnp.arange(B, dtype=pb.dtype))
@@ -300,27 +309,12 @@ def paged_decode_attention_block(p, x, cfg, positions, cache, block_tables,
     if constrain is not None:
         new_cache = constrain(new_cache)
 
-    safe = jnp.maximum(block_tables, 0)                             # (B,n_bt)
-
-    def gather(pool):
-        g = pool[safe]                       # (B, n_bt, bs, Hkv, ·)
-        return g.reshape(B, n_bt * bs, *pool.shape[2:])
-
-    if "k_scale" in new_cache:
-        k = _kv_dequantize(gather(new_cache["k"]),
-                           gather(new_cache["k_scale"]), x.dtype)
-        v = _kv_dequantize(gather(new_cache["v"]),
-                           gather(new_cache["v_scale"]), x.dtype)
-    else:
-        k, v = gather(new_cache["k"]), gather(new_cache["v"])
-    base = (jnp.arange(n_bt, dtype=jnp.int32)[None, :, None] * bs
-            + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
-    k_pos = jnp.where(block_tables[:, :, None] >= 0, base,
-                      -1).reshape(B, n_bt * bs)
     # full attention only: a bounded block table cannot represent a
     # wrapping SWA ring (configs.paged_capable forbids the combination)
     assert cfg.attn_type == "full", cfg.attn_type
-    o = sdpa(q, k, v, pos1d, k_pos, causal=True, window=0)
+    o = ops.paged_decode_attention(
+        q[:, 0], new_cache["k"], new_cache["v"], block_tables, pos,
+        k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"))
     y = linear(p["wo"], o.reshape(B, 1, -1), cfg.quant_mode)
     return y, new_cache
 

@@ -99,8 +99,10 @@ def apply_block_decode(p, x, cfg, kind, positions, cache, enc_kv=None,
     ``constrain`` (executor-threaded, DESIGN.md §5) re-pins the block's
     updated cache to its serving sharding after the masked writes.
     ``block_tables`` (B, n_bt) selects the paged attention path — the block
-    cache is then a pool dict (DESIGN.md §3); only pure-attention stacks
-    resolve to the paged layout (configs.ModelConfig.paged_capable)."""
+    cache is then a pool dict and the read side goes through the routed
+    flash-decode kernel, ``kernels.ops.paged_decode_attention`` (DESIGN.md
+    §3 "Paged-decode kernel"); only pure-attention stacks resolve to the
+    paged layout (configs.ModelConfig.paged_capable)."""
     h = layers.apply_norm(p["norm1"], x, cfg)
     if kind in ("attn", "xattn"):
         if block_tables is not None:

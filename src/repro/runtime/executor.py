@@ -33,6 +33,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models import kvcache as kvc
 from repro.runtime import sharding as shr
 from repro.runtime.elastic import make_mesh_from_plan, plan_remesh
@@ -73,9 +74,15 @@ class Executor:
             self.n_bt = kvc.table_width(max_seq, self.block_size)
             self.n_blocks = (n_blocks if n_blocks is not None
                              else max_batch * self.n_bt)
+            # resolved read-side route for the decode step (kernels.ops:
+            # pallas / gather / ref / interpret).  Pinned at construction so
+            # serve stats report the route the compiled executable actually
+            # traced — the backend cannot change under a live Executor.
+            self.paged_attn_route = ops.paged_attn_route()
         else:
             self.n_bt = 0
             self.n_blocks = 0
+            self.paged_attn_route = None
             if n_blocks is not None:
                 raise ValueError("n_blocks only applies to the paged cache "
                                  "layout (cfg.resolved_cache_layout)")

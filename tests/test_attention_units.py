@@ -173,3 +173,57 @@ class TestMoE:
         e = jnp.asarray([[1, 0, 1, 1, 0]])
         ranks = moe._row_ranks(e, 4)
         np.testing.assert_array_equal(np.asarray(ranks), [[0, 0, 1, 2, 1]])
+
+
+class TestKVQuant:
+    """Per-entry int8 KV quantization round-trip (`_kv_quantize` /
+    `_kv_dequantize`): the paged-decode kernel fuses this dequant into its
+    VMEM pass, so the codec's corner cases are kernel corner cases."""
+
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        t = jnp.asarray(rng.normal(size=(4, 3, 32)) * 10, jnp.bfloat16)
+        q, scale = attention._kv_quantize(t)
+        assert q.dtype == jnp.int8 and scale.shape == (4, 3, 1)
+        back = attention._kv_dequantize(q, scale, jnp.float32)
+        # symmetric rounding: error <= half a quantization step per entry
+        err = np.abs(np.asarray(back) - np.asarray(t, np.float32))
+        assert (err <= np.asarray(scale) / 2 + 1e-6).all()
+
+    def test_zero_vector_is_exact(self):
+        """An all-zero entry must quantize to codes 0 and dequantize back
+        to exactly zero (the 1e-8 amax floor prevents 0/0, not accuracy)."""
+        t = jnp.zeros((2, 1, 16), jnp.bfloat16)
+        q, scale = attention._kv_quantize(t)
+        assert (np.asarray(q) == 0).all()
+        assert (np.asarray(scale) > 0).all()          # no divide-by-zero
+        back = attention._kv_dequantize(q, scale, jnp.bfloat16)
+        assert (np.asarray(back, np.float32) == 0.0).all()
+
+    def test_max_magnitude_hits_127_and_survives(self):
+        """The per-entry amax element maps to exactly ±127 and round-trips
+        to its own value bit-for-bit (scale = amax/127 by construction)."""
+        t = np.zeros((1, 1, 8), np.float32)
+        t[0, 0, 0] = 96.0                              # the amax element
+        t[0, 0, 1] = -96.0                             # symmetric extreme
+        q, scale = attention._kv_quantize(jnp.asarray(t))
+        assert np.asarray(q)[0, 0, 0] == 127
+        assert np.asarray(q)[0, 0, 1] == -127
+        np.testing.assert_allclose(np.asarray(scale)[0, 0, 0], 96.0 / 127.0,
+                                   rtol=1e-6)
+        back = np.asarray(attention._kv_dequantize(q, scale, jnp.float32))
+        np.testing.assert_allclose(back[0, 0, :2], [96.0, -96.0], rtol=1e-6)
+
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([1, 4, 16]))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip_property(self, seed, magnitude):
+        """Any bf16 entry round-trips within half a step of its per-entry
+        scale, across magnitudes (property; conftest fallback API)."""
+        rng = np.random.default_rng(seed)
+        t = jnp.asarray(rng.normal(size=(3, 2, 24)) * magnitude,
+                        jnp.bfloat16)
+        q, scale = attention._kv_quantize(t)
+        assert np.abs(np.asarray(q)).max() <= 127
+        back = attention._kv_dequantize(q, scale, jnp.float32)
+        err = np.abs(np.asarray(back) - np.asarray(t, np.float32))
+        assert (err <= np.asarray(scale) / 2 + 1e-5 * magnitude).all()

@@ -304,6 +304,46 @@ def test_paged_serving_sharded_matches_dense_single_device():
     assert "OK 4" in out
 
 
+def test_paged_kernel_no_recompile_on_mesh():
+    """(4,2)-mesh twin of test_serving's table-content stability test: the
+    routed paged-decode kernel path with the block pool sharded
+    block-over-data still compiles the decode step exactly once across
+    steps whose block tables differ only in content (fresh / permuted /
+    freed / reused-with-holes)."""
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.launch.mesh import make_mesh
+        from repro.models import build_model
+        from repro.runtime.executor import Executor
+
+        cfg = reduced_config(get_config("qwen3-8b"))
+        model = build_model(cfg)
+        params = model.quantize(model.init(jax.random.PRNGKey(0)), 8)
+        cfg = dataclasses.replace(cfg, quant_mode="psi8")
+        mesh = make_mesh((4, 2), ("data", "model"))
+        ex = Executor(cfg, params, max_batch=4, max_seq=64, mesh=mesh)
+        assert ex.paged and ex.paged_attn_route == "ref", ex.paged_attn_route
+        B, n_bt = ex.max_batch, ex.n_bt
+        cache = ex.init_cache()
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.ones((B, 1), np.int32)
+        act = np.ones((B,), bool)
+        tables = [
+            np.arange(B * n_bt, dtype=np.int32).reshape(B, n_bt),
+            np.arange(B * n_bt, dtype=np.int32)[::-1].reshape(B, n_bt),
+            np.full((B, n_bt), -1, np.int32),
+            np.roll(np.arange(B * n_bt, dtype=np.int32), 5).reshape(B, n_bt),
+        ]
+        tables[3][:, -1] = -1
+        for bt in tables:
+            _, cache = ex.decode(tok, pos, act, cache, block_table=bt)
+        assert ex.decode_cache_size() == 1, ex.decode_cache_size()
+        print("OK", ex.decode_cache_size())
+    """)
+    assert "OK 1" in out
+
+
 def test_executor_elastic_remesh_and_straggler_noop():
     """The executor's elastic hooks: from_devices sizes the mesh with
     plan_remesh, remesh() is a no-op when the plan matches, and the

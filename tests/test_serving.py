@@ -160,6 +160,32 @@ class TestEngine:
                           continuous=True)
         assert qwen_server.decode_cache_size() == 1
 
+    def test_paged_kernel_no_recompile_across_table_contents(self,
+                                                             qwen_server):
+        """The routed paged-decode kernel path (1x1 mesh; the (4,2)-mesh
+        twin lives in test_distributed.py): block tables are decode-step
+        *inputs*, so steps whose tables differ only in content — new
+        allocations, permuted physical blocks, freed-and-reused blocks,
+        holes — must all reuse one compiled decode executable."""
+        ex = qwen_server.executor
+        assert ex.paged and ex.paged_attn_route is not None
+        B, n_bt = ex.max_batch, ex.n_bt
+        cache = ex.init_cache()
+        tok = np.zeros((B, 1), np.int32)
+        pos = np.ones((B, 1), np.int32)
+        act = np.ones((B,), bool)
+        tables = [
+            np.arange(B * n_bt, dtype=np.int32).reshape(B, n_bt),    # fresh
+            np.arange(B * n_bt, dtype=np.int32)[::-1].reshape(B, n_bt),
+            np.full((B, n_bt), -1, np.int32),                        # freed
+            np.roll(np.arange(B * n_bt, dtype=np.int32),             # reused
+                    3).reshape(B, n_bt),
+        ]
+        tables[3][0, -1] = -1                                        # hole
+        for bt in tables:
+            _, cache = ex.decode(tok, pos, act, cache, block_table=bt)
+        assert qwen_server.decode_cache_size() == 1
+
     def test_eos_retirement(self, qwen_server):
         """With an EOS id, every request's stream either stops right after
         its first EOS token or runs to its max_new budget."""
