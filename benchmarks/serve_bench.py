@@ -24,6 +24,14 @@ where* work runs, never the results:
    reused tokens, and p50 TTFT with/without the cache, and asserts the
    cached run is token-identical with a measured hit rate > 0, strictly
    fewer mean prefilled tokens, and a p50 TTFT win.
+5. **self-speculative decoding** (DESIGN.md §"Self-speculative decoding"):
+   the same trace served plain vs with ``--speculative 3:4`` — a psi3
+   draft view of the SAME checkpoint drafting 4 tokens/round, verified in
+   one target-width pass.  Both runs use a QAT-preconditioned checkpoint
+   (``--qat-precondition 3``: random-init logit margins drown in 3-bit
+   noise; a trained checkpoint's margins are what speculation exploits).
+   Asserts token identity, the compile-exactly-twice contract, and a mean
+   accepted length > 1; reports the tokens/s ratio and draft overhead.
 
 Results go to stdout AND to a machine-readable ``BENCH_serve.json`` (like
 ``BENCH_quant.json``) so CI can track the serving trajectory across PRs;
@@ -44,9 +52,11 @@ token-identical results:
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import time
 
+from repro.core.quantizer import parse_quant_mode
 from repro.launch.serve import add_serve_args, build_server, trace_from_args
 
 DEFAULT_OUT = "BENCH_serve.json"
@@ -272,6 +282,88 @@ def run_bench(args, out_path=None):
             "on": stat_on,
         }
 
+    kind, sbits = ((None, None) if args.quant == "none"
+                   else parse_quant_mode(args.quant))
+    if server.paged and cfg.rope == "rope" and kind == "psi" and sbits > 3:
+        # ---- 5. self-speculative decoding: psi3 draft + k=4 verify ----
+        # Both servers serve the QAT-preconditioned checkpoint so the
+        # spec-off baseline emits the same tokens; only the decode engine
+        # differs.  The curated default shape (user overrides keep their
+        # own) uses longer fixed-ish budgets so rounds dominate prefill.
+        # Curated default shape: fixed full-length decode budgets keep the
+        # comparison decode-dominated (where the draft/verify round pays),
+        # and the tokens/s is the MEDIAN over 3 serves per engine — the
+        # tokens are deterministic, wall time on a shared CI box is not.
+        user_set = bool(getattr(args, "speculative", None))
+        sargs = _clone_args(
+            args,
+            speculative=(args.speculative if user_set else "3:4"),
+            qat_precondition=(getattr(args, "qat_precondition", 0) or 3),
+            requests=(args.requests if user_set else 12),
+            max_batch=(args.max_batch if user_set else 2),
+            max_new=(args.max_new if user_set else 64),
+            min_new=(args.min_new if user_set else 64),
+            prompt_jitter=0, cache_blocks=None, prefix_cache="off")
+        spec_off, scfg = build_server(_clone_args(sargs, speculative=None))
+        spec_on, _ = build_server(sargs)
+
+        def strace():
+            return trace_from_args(sargs, scfg)
+
+        def median_spec_serve(server):
+            # Collect before each timed serve: earlier sections leave dead
+            # servers in reference cycles (Executor <-> jitted bound
+            # methods), and the cyclic GC otherwise fires MID-SERVE —
+            # releasing their XLA buffers inside the timed loop skewed the
+            # first post-section serve ~4x.
+            server.warmup(strace())
+            runs = []
+            for _ in range(3):
+                gc.collect()
+                runs.append(server.serve(strace(), continuous=True,
+                                         warmup=False))
+            runs.sort(key=lambda ds: ds[1]["tok_per_s"])
+            return runs[1]                       # median-throughput run
+
+        done_soff, stat_soff = median_spec_serve(spec_off)
+        done_son, stat_son = median_spec_serve(spec_on)
+        _assert_identical(done_soff, done_son, "speculative off/on")
+        sp = stat_son["speculative"]
+        spec_ratio = (stat_son["tok_per_s"] / stat_soff["tok_per_s"]
+                      if stat_soff["tok_per_s"] > 0 else 0.0)
+        print(f"  spec      : psi{sp['draft_bits']} draft, k={sp['k']} -> "
+              f"accepted {stat_son['accepted_per_step']:.2f}/round over "
+              f"{sp['rounds']} rounds | {stat_son['tok_per_s']:.1f} vs "
+              f"{stat_soff['tok_per_s']:.1f} tok/s ({spec_ratio:.2f}x) | "
+              f"draft overhead {stat_son['draft_overhead_s']:.3f}s | "
+              f"compiles {sp['spec_compiles']}")
+        assert sp["spec_compiles"] == {"draft": 1, "verify": 1,
+                                       "decode": 0}, (
+            f"speculative compile contract: {sp['spec_compiles']}")
+        assert sp["mean_accepted"] > 1, (
+            f"speculative draft must amortize the verify pass: mean "
+            f"accepted length {sp['mean_accepted']} <= 1")
+        if not user_set:
+            # hard wall-clock win only on the curated shape (measured
+            # ~1.5x on the reduced CPU config; generous flake margin)
+            assert spec_ratio > 1.1, (
+                f"speculative decode must beat plain decode on the "
+                f"curated trace, got {spec_ratio:.2f}x")
+        payload["speculative"] = {
+            "draft_bits": sp["draft_bits"], "k": sp["k"],
+            "token_identical": True,
+            "rounds": sp["rounds"],
+            "mean_accepted": sp["mean_accepted"],
+            "accepted_per_step": stat_son["accepted_per_step"],
+            "draft_overhead_s": stat_son["draft_overhead_s"],
+            "tok_per_s_off": stat_soff["tok_per_s"],
+            "tok_per_s_on": stat_son["tok_per_s"],
+            "speedup": round(spec_ratio, 3),
+            "spec_compiles": sp["spec_compiles"],
+            "off": stat_soff,
+            "on": stat_son,
+        }
+
     if out_path:
         with open(out_path, "w") as f:
             json.dump(payload, f, indent=2, allow_nan=False)
@@ -301,6 +393,10 @@ def run():
         pc = d["prefix_cache"]
         derived += (f";prefix_hit={pc['hit_rate']:.2f}"
                     f";prefix_ttft_win={pc['ttft_win']:.2f}x")
+    if "speculative" in d:
+        sp = d["speculative"]
+        derived += (f";spec_speedup={sp['speedup']:.2f}x"
+                    f";spec_accepted={sp['mean_accepted']:.2f}")
     return [("serve_bench", us, derived)]
 
 

@@ -366,6 +366,40 @@ class QuantizedTensor:
         return QuantizedTensor(pack_codes(self.data, self.fmt), self.scale,
                                self.fmt, packed=True)
 
+    def draft_view(self, bits: FormatLike) -> "QuantizedTensor":
+        """A narrower-width view of the same weights — the self-speculative
+        draft model (DESIGN.md §"Self-speculative decoding").
+
+        The view is derived from the stored codes alone (no float checkpoint
+        round-trip): codes rescale from the source grid to the draft grid
+        (``round(c * qmax_d / qmax_s)``, clipped, PSI-projected) and the
+        per-channel scale absorbs the grid ratio (``scale * qmax_s/qmax_d``).
+        Because symmetric quantization puts the per-channel max |code| exactly
+        at ``qmax_s``, this equals ``quantize_weights(self.dequantize(f32),
+        bits)`` code-for-code: the rounding boundaries sit at half-integers of
+        the draft grid — never exact ties, since both qmax values are odd —
+        with granularity ``1/(2*qmax_s)``, far above f32 rounding error.  The
+        invariant is property-tested in tests/test_psi.py.
+
+        Packing is preserved: a packed source yields a packed draft (the
+        draft planes are the subset-*sized* artifact the bit-plane layout
+        promises — ``bits/8`` bytes per weight, no second checkpoint).
+        """
+        dfmt = get_format(bits)
+        if dfmt.bits > self.fmt.bits:
+            raise ValueError(
+                f"draft_view narrows only: {self.fmt.name} -> {dfmt.name}")
+        if dfmt.bits == self.fmt.bits:
+            return self
+        ratio = dfmt.qmax / self.fmt.qmax
+        c = jnp.clip(jnp.round(self.codes.astype(jnp.float32) * ratio),
+                     dfmt.w_min, dfmt.w_max).astype(jnp.int32)
+        c = psi_project_int(c, dfmt)
+        scale = (self.scale.astype(jnp.float32)
+                 * (self.fmt.qmax / dfmt.qmax)).astype(jnp.float32)
+        out = QuantizedTensor(c.astype(jnp.int8), scale, dfmt)
+        return out.pack() if self.packed else out
+
     def unpack(self) -> "QuantizedTensor":
         if not self.packed:
             return self

@@ -227,6 +227,25 @@ def quantize_param_tree(
     return out
 
 
+def draft_param_tree(params: Dict, draft_bits: int) -> Dict:
+    """Self-speculative draft parameters: every :class:`QuantizedTensor` leaf
+    wider than ``draft_bits`` is replaced by its :meth:`draft_view` (derived
+    from the stored codes, no re-quantization from float); float leaves and
+    leaves already at or below the draft width pass through unchanged, so the
+    draft tree has the *same pytree structure* as the serving tree and reuses
+    its sharding specs verbatim."""
+    fmt = psi.get_format(draft_bits)
+
+    def convert(leaf):
+        if isinstance(leaf, psi.QuantizedTensor) and leaf.fmt.bits > fmt.bits:
+            return leaf.draft_view(fmt)
+        return leaf
+
+    return jax.tree_util.tree_map(
+        convert, params,
+        is_leaf=lambda x: isinstance(x, psi.QuantizedTensor))
+
+
 def dequantize(leaf: Any, dtype=jnp.bfloat16):
     """THE shared dequantize helper: expand one serving-format leaf back to a
     dense float array; non-quantized leaves pass through.  Every inline

@@ -40,6 +40,10 @@ class Request:
     # --- prefix-cache accounting (DESIGN.md §3 "Prefix cache") ---
     prefix_blocks: List[int] = dataclasses.field(default_factory=list)
     prefix_hit_tokens: int = 0          # prompt tokens served from the cache
+    # --- speculative-decode accounting (DESIGN.md "Self-speculative") ---
+    spec_rounds: int = 0                # draft+verify rounds this request ran
+    spec_accepted: int = 0              # draft tokens accepted across rounds
+    draft_s: float = 0.0                # wall seconds spent in draft passes
 
     @property
     def latency_s(self) -> float:
@@ -63,6 +67,15 @@ class Request:
         if self.admit_s is None:
             return float("nan")
         return self.admit_s - self.arrival_s
+
+    @property
+    def accepted_per_step(self) -> float:
+        """Mean draft tokens accepted per speculative round (0..k).  NaN for
+        requests that never ran a speculative round (spec off, or retired at
+        prefill) — ``summarize`` skips NaNs, mirroring the latency fields."""
+        if self.spec_rounds == 0:
+            return float("nan")
+        return self.spec_accepted / self.spec_rounds
 
     @property
     def out(self) -> np.ndarray:
@@ -513,6 +526,14 @@ def _pctile(vals: np.ndarray, q: float) -> float:
     return float(np.percentile(vals, q)) if vals.size else 0.0
 
 
+def _nanmean(vals: np.ndarray) -> float:
+    """Mean over the finite entries only, 0.0 when every entry is NaN (the
+    spec-off trace: no request ever ran a speculative round).  np.nanmean
+    warns on all-NaN slices, so filter explicitly like ``_pctile``."""
+    vals = vals[~np.isnan(vals)]
+    return float(np.mean(vals)) if vals.size else 0.0
+
+
 def summarize(requests: Sequence[Request], wall_s: float,
               mode: str = "") -> Dict:
     """Throughput + latency percentiles over a request set (unfinished
@@ -520,9 +541,11 @@ def summarize(requests: Sequence[Request], wall_s: float,
     if not requests:
         return {"mode": mode, "n_requests": 0, "tokens": 0, "wall_s": wall_s,
                 "tok_per_s": 0.0, "p50_latency_s": 0.0, "p99_latency_s": 0.0,
-                "p50_ttft_s": 0.0, "p99_ttft_s": 0.0}
+                "p50_ttft_s": 0.0, "p99_ttft_s": 0.0,
+                "accepted_per_step": 0.0, "draft_overhead_s": 0.0}
     lats = np.asarray([r.latency_s for r in requests])
     ttfts = np.asarray([r.ttft_s for r in requests])
+    aps = np.asarray([r.accepted_per_step for r in requests])
     tokens = int(sum(len(r.tokens) for r in requests))
     return {
         "mode": mode,
@@ -537,4 +560,10 @@ def summarize(requests: Sequence[Request], wall_s: float,
         "p99_latency_s": _pctile(lats, 99),
         "p50_ttft_s": _pctile(ttfts, 50),
         "p99_ttft_s": _pctile(ttfts, 99),
+        # speculative decoding (0.0 whenever spec is off / no rounds ran):
+        # mean accepted draft tokens per round, and total wall seconds the
+        # engine spent inside draft passes (the overhead amortized by the
+        # accepted tokens)
+        "accepted_per_step": _nanmean(aps),
+        "draft_overhead_s": float(sum(r.draft_s for r in requests)),
     }

@@ -49,8 +49,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.core.quantizer import (parse_policy, parse_quant_mode,
-                                  serving_mode_choices)
+from repro.core.quantizer import (fake_quant_param_tree, parse_policy,
+                                  parse_quant_mode, serving_mode_choices)
 from repro.launch.mesh import make_mesh
 from repro.launch.prefix_cache import PrefixCache
 from repro.launch.scheduler import (BlockAllocator, Request, Scheduler,
@@ -62,6 +62,24 @@ from repro.runtime.executor import Executor
 # number of compiled prefill shapes is bounded (attention caches mask the pad
 # slots out via true_lens; recurrent families prefill at exact length).
 PREFILL_BUCKET = 16
+
+
+def parse_spec_spec(spec: Optional[str]) -> Optional[Tuple[int, int]]:
+    """"BITS:K" (e.g. "3:4") -> (draft_bits, k) for --speculative; None /
+    "off" -> None.  BITS must name a registered PsiFormat narrower than the
+    serving width (validated downstream where the serving format is known);
+    K is the draft length per round."""
+    if not spec or spec == "off":
+        return None
+    try:
+        bits, k = (int(p) for p in spec.split(":"))
+    except ValueError as e:
+        raise ValueError(
+            f"malformed --speculative spec {spec!r}: want \"BITS:K\" with "
+            f"two integers, e.g. \"3:4\" (psi3 draft, 4 tokens/round)") from e
+    if k < 1:
+        raise ValueError(f"--speculative draft length k={k} must be >= 1")
+    return bits, k
 
 
 def parse_mesh_spec(spec: Optional[str]):
@@ -93,9 +111,18 @@ class Server:
     def __init__(self, cfg, params, max_batch: int = 4, max_seq: int = 256,
                  eos_id: int = -1, bucket: int = PREFILL_BUCKET, mesh=None,
                  executor: Optional[Executor] = None,
-                 n_blocks: Optional[int] = None):
+                 n_blocks: Optional[int] = None,
+                 speculative: Optional[Tuple[int, int]] = None):
         self.cfg = cfg
         self.paged = cfg.resolved_cache_layout == kvc.PAGED
+        # Self-speculative decoding (DESIGN.md §"Self-speculative decoding"):
+        # (draft_bits, k) or None.  The Executor validates the deep
+        # preconditions (paged layout, k <= block_size, quantized params);
+        # the Server only tracks the +k-1 cache/block overhang a round's
+        # k-wide write needs past the last emitted token.
+        self.spec = tuple(speculative) if speculative else None
+        self.spec_k = self.spec[1] if self.spec else 0
+        self._spec_overhang = self.spec_k - 1 if self.spec else 0
         # Shared-prefix block reuse (DESIGN.md §3 "Prefix cache"):
         # validated here so an impossible combination (dense layout, mrope)
         # fails at construction, not mid-serve.
@@ -125,9 +152,14 @@ class Server:
                     f"injected executor was built for max_batch="
                     f"{executor.max_batch}, max_seq={executor.max_seq}; "
                     f"Server asked for {max_batch}/{max_seq}")
+            if executor.speculative != self.spec:
+                raise ValueError(
+                    f"injected executor was built with speculative="
+                    f"{executor.speculative}; Server asked for {self.spec}")
         self.executor = executor if executor is not None else Executor(
             cfg, params, max_batch=max_batch, max_seq=max_seq, mesh=mesh,
-            n_blocks=n_blocks if self.paged else None)
+            n_blocks=n_blocks if self.paged else None,
+            speculative=self.spec)
         self.cache_bytes = kvc.cache_nbytes(jax.eval_shape(
             self.executor._init_cache_fn))
         # Recurrent state absorbs pad tokens, so SSM/hybrid (and whisper's
@@ -143,9 +175,12 @@ class Server:
         """Worst-case pool blocks for one request: the bucketed prefill
         extent or the prompt+decode-budget extent, whichever is longer —
         the admission gate reserves this so a running request can never
-        starve mid-decode (early EOS returns the unused tail)."""
+        starve mid-decode (early EOS returns the unused tail).  Speculative
+        rounds are k positions wide regardless of remaining budget, so the
+        last round can write up to k-1 positions past the final emitted
+        token — the overhang joins the reservation."""
         need = max(self._bucket_len(len(req.prompt)),
-                   len(req.prompt) + req.max_new)
+                   len(req.prompt) + req.max_new + self._spec_overhang)
         return kvc.blocks_for(need, self.block_size)
 
     def _block_pref(self, slot: int) -> Optional[int]:
@@ -214,7 +249,8 @@ class Server:
             # evict prompt tokens the causal mask still expects.  (SWA is
             # exempt — rolling the window is its defined semantics — and so
             # are attention-free SSMs, whose state is constant-size.)
-            need = max(sb, *(len(r.prompt) + r.max_new for _, r in admits))
+            need = max(sb, *(len(r.prompt) + r.max_new + self._spec_overhang
+                             for _, r in admits))
             if need > self.max_seq:
                 raise ValueError(
                     f"request needs cache extent {need} (bucketed prompt + "
@@ -332,12 +368,7 @@ class Server:
             # seq cache's extent follows the bucket (paged); dense prefills
             # at cache_len=max_seq, so one insert executable covers all
             n_shapes += len(buckets) if self.paged else 1
-        tok = np.zeros((self.max_batch, 1), np.int32)
-        act = np.zeros((self.max_batch,), bool)
-        bt = (np.full((self.max_batch, ex.n_bt), -1, np.int32)
-              if self.paged else None)
-        jax.block_until_ready(ex.decode(tok, tok, act, cache, block_table=bt))
-        n_shapes += 1
+        n_shapes += self._warm_decode(cache)
         if verbose:
             skipped = 0 if burst_reachable else 2 * len(buckets)
             print(f"[warmup] compiled {n_shapes} shapes "
@@ -346,6 +377,34 @@ class Server:
                   + (f", skipped {skipped} unreachable burst shape(s)"
                      if skipped else "") + ")")
         return n_shapes
+
+    def _warm_decode(self, cache) -> int:
+        """Compile the decode-side step(s) against a throwaway cache and
+        return how many shapes that took.  Plain engine: the single
+        shape-stable decode step.  Speculative engine: the fused draft scan
+        plus the k-token verify — and the compile contract (exactly those
+        TWO executables, the plain decode step never traced) is asserted
+        here so a shape regression fails loudly at warmup, not as a silent
+        slowdown in a benchmark diff."""
+        ex = self.executor
+        B = self.max_batch
+        tok = np.zeros((B, 1), np.int32)
+        act = np.zeros((B,), bool)
+        bt = (np.full((B, ex.n_bt), -1, np.int32) if self.paged else None)
+        if not self.spec:
+            jax.block_until_ready(ex.decode(tok, tok, act, cache,
+                                            block_table=bt))
+            return 1
+        drafts, cache = jax.block_until_ready(
+            ex.draft(tok, tok, act, cache, bt))
+        jax.block_until_ready(ex.verify(tok, drafts, tok, act, cache, bt))
+        sizes = ex.spec_cache_sizes()
+        if sizes != {"draft": 1, "verify": 1, "decode": 0}:
+            raise RuntimeError(
+                f"speculative compile contract violated at warmup: want "
+                f"exactly one draft + one verify executable with the plain "
+                f"decode step untraced, got {sizes}")
+        return 2
 
     def _warmup_prefix(self, requests: Sequence[Request],
                        verbose: bool) -> int:
@@ -378,17 +437,70 @@ class Server:
                 ex.prefill_insert(toks1, tl1, cache, 0, block_row=brow,
                                   ctx_ids=np.zeros((nctx,), np.int32)))
             n_shapes += 1
-        tok = np.zeros((self.max_batch, 1), np.int32)
-        act = np.zeros((self.max_batch,), bool)
-        bt = np.full((self.max_batch, ex.n_bt), -1, np.int32)
-        jax.block_until_ready(ex.decode(tok, tok, act, cache,
-                                        block_table=bt))
-        n_shapes += 1
+        n_shapes += self._warm_decode(cache)
         if verbose:
             print(f"[warmup] compiled {n_shapes} shapes "
                   f"({len(shapes)} (bucket, prefix-depth) pair(s), layout "
                   f"paged + prefix cache)")
         return n_shapes
+
+    def _spec_round(self, sched, cache, tok, pos, act, bt, now_fn):
+        """One self-speculative round (DESIGN.md §"Self-speculative
+        decoding"): a fused k-step draft pass at the low-bit view of the
+        serving checkpoint, then ONE k-token verify at the target width.
+        Per slot, accept the longest draft prefix the target agrees with
+        (a) and emit min(a+1, k) tokens — the accepted drafts plus the
+        target's correction verdict, which IS the plain-decode token for
+        that position, so a=0 degrades to exactly non-speculative output.
+        Emission is capped at the request's remaining budget and truncated
+        at the first EOS; ``pos`` advances by the emitted count only, so
+        rejected-tail cache entries sit strictly at/above the next feed
+        position and are overwritten by the next round before any query can
+        causally read them (no rollback pass)."""
+        ex = self.executor
+        K = self.spec_k
+        t_draft = time.perf_counter()
+        drafts_dev, cache = ex.draft(tok, pos, act, cache, bt)
+        # the verify window is assembled on device from the draft output,
+        # so both dispatches enqueue back-to-back with no host round-trip
+        verdicts, cache = ex.verify(tok, drafts_dev, pos, act, cache, bt)
+        drafts = np.asarray(drafts_dev)
+        # drafts materialize as soon as the draft executable finishes (the
+        # verify is merely queued behind it), so this measures the round's
+        # draft side; the verify sync below is the target-model cost any
+        # decode engine pays
+        draft_dt = time.perf_counter() - t_draft
+        verdicts = np.asarray(verdicts)
+        now = now_fn()
+        share = draft_dt / max(len(sched.running), 1)
+        for slot in list(sched.running):
+            req = sched.running[slot]
+            req.draft_s += share
+            d, v = drafts[slot], verdicts[slot]
+            a = 0
+            while a < K and d[a] == v[a]:
+                a += 1
+            emit = [int(x) for x in d[:a]]
+            if a < K:
+                emit.append(int(v[a]))
+            req.spec_rounds += 1
+            req.spec_accepted += a
+            finished = False
+            n_emit = 0
+            for t in emit:
+                req.tokens.append(t)
+                n_emit += 1
+                if t == self.eos_id or len(req.tokens) >= req.max_new:
+                    finished = True
+                    break
+            pos[slot, 0] += n_emit
+            if finished:
+                act[slot] = False
+                sched.retire(slot, now)
+                bt[slot, :] = -1
+            else:
+                tok[slot, 0] = emit[n_emit - 1]
+        return cache
 
     # ------------------------------------------------------------- the loop
     def serve(self, requests: Sequence[Request], continuous: bool = True,
@@ -407,12 +519,15 @@ class Server:
             # aborting mid-run at admission time
             bad = [r.rid for r in requests
                    if max(self._bucket_len(len(r.prompt)),
-                          len(r.prompt) + r.max_new) > self.max_seq]
+                          len(r.prompt) + r.max_new + self._spec_overhang)
+                   > self.max_seq]
             if bad:
                 raise ValueError(
                     f"requests {bad} need more cache than max_seq="
-                    f"{self.max_seq} (bucketed prompt + max_new); size the "
-                    f"Server for the longest request")
+                    f"{self.max_seq} (bucketed prompt + max_new"
+                    + (f" + the k-1 speculative overhang"
+                       if self._spec_overhang else "")
+                    + "); size the Server for the longest request")
         if self.paged:
             # same fail-fast for the block pool: a request whose worst case
             # exceeds the whole pool could never reserve, and admission
@@ -485,14 +600,23 @@ class Server:
                     time.sleep(min(wait, 0.005))
                 continue
             if self.paged:
-                # alloc-on-demand: the block that will hold this step's
-                # write must exist before the step runs (reserved at
-                # admission, so the alloc cannot fail)
+                # alloc-on-demand: every block this step's writes can touch
+                # must exist before the step runs (reserved at admission, so
+                # the allocs cannot fail).  A plain step writes one
+                # position; a speculative round writes k consecutive ones.
+                span = max(self.spec_k, 1)
                 for slot, req in sched.running.items():
-                    li = int(pos[slot, 0]) // self.block_size
-                    if bt[slot, li] < 0:
-                        bt[slot, li] = sched.blocks.alloc(
-                            req.rid, shard=self._block_pref(slot))
+                    p0 = int(pos[slot, 0])
+                    for li in range(p0 // self.block_size,
+                                    (p0 + span - 1) // self.block_size + 1):
+                        if bt[slot, li] < 0:
+                            bt[slot, li] = sched.blocks.alloc(
+                                req.rid, shard=self._block_pref(slot))
+            if self.spec:
+                cache = self._spec_round(sched, cache, tok, pos, act, bt,
+                                         lambda: clock() - t0)
+                steps += 1
+                continue
             new_tok, cache = ex.decode(tok, pos, act, cache, block_table=bt)
             new_tok = np.asarray(new_tok)
             steps += 1
@@ -518,6 +642,18 @@ class Server:
         stats["cache_layout"] = "paged" if self.paged else "dense"
         stats["cache_bytes"] = self.cache_bytes
         stats["peak_concurrency"] = peak_running
+        if self.spec:
+            rounds = int(sum(r.spec_rounds for r in sched.finished))
+            accepted = int(sum(r.spec_accepted for r in sched.finished))
+            stats["speculative"] = {
+                "draft_bits": self.spec[0],
+                "k": self.spec[1],
+                "rounds": rounds,
+                "accepted_draft_tokens": accepted,
+                "mean_accepted": (round(accepted / rounds, 3)
+                                  if rounds else 0.0),
+                "spec_compiles": ex.spec_cache_sizes(),
+            }
         # prefill accounting (prefix cache or not): tokens the engine
         # actually forwarded vs tokens served out of shared blocks
         n_done = max(len(sched.finished), 1)
@@ -561,6 +697,15 @@ def build_server(args) -> Tuple[Server, object]:
     cfg.prefix_cache_enabled         # ...and the prefix-cache combo
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    pre = int(getattr(args, "qat_precondition", 0) or 0)
+    if pre:
+        # Emulate a checkpoint TRAINED with the quantizer in the loop (the
+        # paper's QAT flow): snap weights to the psi`pre` grid before the
+        # serving quantization.  Random-init weights have logit margins
+        # smaller than low-bit quantization noise, so without this the
+        # speculative draft's acceptance rate is ~0 — a trained checkpoint's
+        # margins are what make self-speculation pay (DESIGN.md).
+        params = fake_quant_param_tree(params, pre)
     policy = parse_policy(getattr(args, "quant_policy", None))
     if args.quant != "none" or policy:
         _, bits = parse_quant_mode(args.quant)
@@ -574,9 +719,19 @@ def build_server(args) -> Tuple[Server, object]:
         if mode == "none" and policy and policy.get("default"):
             mode = f"psi{policy['default']}"
         cfg = dataclasses.replace(cfg, quant_mode=mode)
+    spec = parse_spec_spec(getattr(args, "speculative", None))
+    if spec:
+        kind, sbits = parse_quant_mode(args.quant)
+        if kind != "psi" or sbits <= spec[0]:
+            raise ValueError(
+                f"--speculative {spec[0]}:{spec[1]} derives the draft from "
+                f"the PSI serving codes, so it needs a WIDER serving format "
+                f"(--quant psiN with N > {spec[0]}); got --quant "
+                f"{args.quant}")
     # Cache extent must cover the *bucketed* prefill plus the decode budget,
     # or the ring layout would silently drop the prompt head.  A shared
-    # system prompt prepends to every request's unique tail.
+    # system prompt prepends to every request's unique tail.  Speculative
+    # rounds write k positions regardless of remaining budget: +k-1.
     longest = (args.prompt_len + args.prompt_jitter
                + getattr(args, "shared_prefix_len", 0))
     prompt_pad = -(-longest // PREFILL_BUCKET) * PREFILL_BUCKET
@@ -585,12 +740,13 @@ def build_server(args) -> Tuple[Server, object]:
     # Server rounds anyway, and giving dense the same extent keeps the two
     # layouts' attention shapes — and therefore their greedy tokens —
     # bit-identical for the serve_bench cross-layout assertion.
-    max_seq = prompt_pad + args.max_new + 8
+    max_seq = prompt_pad + args.max_new + 8 + (spec[1] - 1 if spec else 0)
     bsz = cfg.cache_block_size
     max_seq = -(-max_seq // bsz) * bsz
     server = Server(cfg, params, max_batch=args.max_batch, max_seq=max_seq,
                     eos_id=args.eos_id, mesh=mesh,
-                    n_blocks=getattr(args, "cache_blocks", None))
+                    n_blocks=getattr(args, "cache_blocks", None),
+                    speculative=spec)
     return server, cfg
 
 
@@ -672,6 +828,21 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
                          "tokens to every prompt (the shared-system-prompt "
                          "traffic shape; --prompt-len then sizes the "
                          "unique tail)")
+    ap.add_argument("--speculative", default=None, metavar="BITS:K",
+                    help="self-speculative decoding (DESIGN.md): draft K "
+                         "tokens per round with a psiBITS view of the "
+                         "serving checkpoint (derived from the stored "
+                         "codes — no second model), then verify all K in "
+                         "one target-width pass; greedy acceptance keeps "
+                         "outputs token-identical to plain decode.  e.g. "
+                         "\"3:4\".  Requires --quant psiN with N > BITS, "
+                         "the paged cache layout, and K <= --block-size.")
+    ap.add_argument("--qat-precondition", type=int, default=0, metavar="BITS",
+                    help="snap the random-init weights to the psiBITS grid "
+                         "before serving quantization (emulates a QAT-"
+                         "trained checkpoint; 0 = off).  Random weights' "
+                         "logit margins drown in low-bit noise, so "
+                         "speculative acceptance studies need this.")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="-1 disables EOS retirement")
     ap.add_argument("--seed", type=int, default=0)
@@ -704,6 +875,11 @@ def main():
             cache_info += (f" | prefix hit rate {pc['hit_rate']:.2f}, "
                            f"{stats['prefix_tokens_reused']} tok reused / "
                            f"{stats['prefilled_tokens']} prefilled")
+        if "speculative" in stats:
+            sp = stats["speculative"]
+            cache_info += (f" | spec psi{sp['draft_bits']} k={sp['k']}: "
+                           f"{stats['accepted_per_step']:.2f} accepted/"
+                           f"round, draft {stats['draft_overhead_s']:.3f}s")
         print(f"[{mode}] served {stats['n_requests']} requests: "
               f"{stats['tokens']} tokens in {stats['wall_s']:.3f}s = "
               f"{stats['tok_per_s']:.1f} tok/s | "

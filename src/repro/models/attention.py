@@ -319,6 +319,72 @@ def paged_decode_attention_block(p, x, cfg, positions, cache, block_tables,
     return y, new_cache
 
 
+def paged_verify_attention_block(p, x, cfg, positions, cache, block_tables,
+                                 active=None, constrain=None):
+    """k-token speculative VERIFY against the paged pool (DESIGN.md
+    §"Self-speculative decoding").
+
+    ``x`` is (B, k, d): the round's feed token followed by the first k-1
+    drafted tokens; ``positions`` (B, k) are their consecutive absolute
+    positions.  All k new KV entries scatter first — re-writing the
+    positions the draft pass filled with draft-computed KV (the re-scatter
+    rollback scheme: the target pass owns those pool entries from here on,
+    so a rejected tail leaves only entries that are overwritten before any
+    later query can see them) — then the read side flattens the k queries
+    into (B*k) rows through the SAME routed flash-decode kernel as plain
+    decode (``ops.paged_decode_attention``), with per-row positions giving
+    each drafted token exactly its causal prefix.  Consecutive positions
+    give the k writes distinct (block, offset) destinations iff k <= the
+    block size — asserted, and enforced at the CLI flag.
+    """
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+    B, S = x.shape[:2]
+    N, bs = cache["k"].shape[0], cache["k"].shape[1]
+    n_bt = block_tables.shape[1]
+    assert S <= bs, (
+        f"verify width k={S} > block_size={bs}: consecutive positions would "
+        f"collide in one block's offsets")
+    li = positions // bs                                           # (B, k)
+    off = positions % bs
+    in_range = li < n_bt
+    pb = jnp.take_along_axis(block_tables, jnp.minimum(li, n_bt - 1), axis=1)
+    ok = (pb >= 0) & in_range
+    if active is not None:
+        ok = ok & active[:, None]
+    scratch = N - B + jnp.arange(B, dtype=pb.dtype)[:, None]
+    dest = jnp.where(ok, pb, scratch).reshape(-1)                  # (B*k,)
+    offf = off.reshape(-1)
+
+    def scat(pool, vals):                                          # (B,k,H,·)
+        return pool.at[dest, offf].set(
+            vals.reshape(B * S, *vals.shape[2:]).astype(pool.dtype))
+
+    if "k_scale" in cache:
+        kq, ks = _kv_quantize(k_new)
+        vq, vs = _kv_quantize(v_new)
+        new_cache = {
+            "k": scat(cache["k"], kq),
+            "v": scat(cache["v"], vq),
+            "k_scale": scat(cache["k_scale"], ks),
+            "v_scale": scat(cache["v_scale"], vs),
+        }
+    else:
+        new_cache = {
+            "k": scat(cache["k"], k_new),
+            "v": scat(cache["v"], v_new),
+        }
+    if constrain is not None:
+        new_cache = constrain(new_cache)
+
+    assert cfg.attn_type == "full", cfg.attn_type
+    o = ops.paged_decode_attention(
+        q.reshape(B * S, *q.shape[2:]), new_cache["k"], new_cache["v"],
+        jnp.repeat(block_tables, S, axis=0), positions.reshape(-1),
+        k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"))
+    y = linear(p["wo"], o.reshape(B, S, -1), cfg.quant_mode)
+    return y, new_cache
+
+
 def init_paged_kv_cache(cfg, n_total, block_size, dtype=jnp.bfloat16):
     """Block-pool KV storage for one attention layer: ``n_total`` blocks of
     ``block_size`` positions each (``n_total = n_blocks + max_batch``; the

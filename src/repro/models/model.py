@@ -270,6 +270,45 @@ class Model:
         logits = self._logits(params, x)
         return logits[:, 0], cache.replace(kv=new_kv)
 
+    def verify_step(self, params, batch, cache: KVCache, mesh=None):
+        """Speculative VERIFY: score k consecutive tokens per slot in one
+        decode-shaped batched pass (DESIGN.md §"Self-speculative decoding").
+
+        batch: {"tokens": (B, k) — the round's feed token then the first
+        k-1 drafted tokens, "pos0": (B, 1) — the feed token's absolute
+        position, optional "active": (B,) bool, "block_table": (B, n_bt)}.
+        Positions run ``pos0 + [0, k)`` per row.  Returns (logits (B, k, V),
+        new cache); ``argmax(logits[:, j-1])`` is the target model's greedy
+        token after consuming draft j-1 — the verdict the acceptance rule
+        compares drafts against.  The pass re-scatters target-computed KV
+        over all k positions, replacing what the draft pass wrote (the
+        rollback scheme: rejected-tail entries stay stale only until the
+        next round's writes reach them, and no earlier-position query can
+        ever attend to them).  Paged caches only.
+        """
+        cfg = self.cfg
+        if not cache.paged:
+            raise ValueError("speculative verify runs against the paged "
+                             "cache layout only")
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = batch["pos0"] + jnp.arange(S, dtype=jnp.int32)[None]
+        x = embed(params["embed"], tokens, jnp.dtype(cfg.dtype))
+        if cfg.rope == "sinusoidal":
+            x = x + layers.sinusoidal_from_positions(
+                positions, cfg.d_model, jnp.dtype(cfg.dtype))
+        constrain = None
+        if mesh is not None and mesh.size > 1:
+            constrain = functools.partial(shr.constrain_block_cache, cfg,
+                                          mesh, paged=True)
+        x, new_kv = transformer.apply_decoder_stack_verify(
+            params["stack"], x, cfg, positions, cache.kv,
+            batch["block_table"], active=batch.get("active"),
+            constrain=constrain)
+        x = layers.apply_norm(params["norm_f"], x, cfg)
+        logits = self._logits(params, x)
+        return logits, cache.replace(kv=new_kv)
+
     def slice_cache(self, cache: KVCache, row) -> KVCache:
         """Batch row ``row`` of a batched DENSE cache as a batch-1 cache
         (the counterpart of ``insert_cache`` for splitting batched

@@ -289,6 +289,51 @@ def apply_decoder_stack_decode(p, x, cfg, positions, cache, enc_kv=None,
     return x, (new_g_cache, new_t)
 
 
+def apply_block_verify(p, x, cfg, positions, cache, block_tables,
+                       active=None, constrain=None):
+    """k-token speculative-verify block (paged attention stacks only): the
+    attention half goes through ``attention.paged_verify_attention_block``;
+    norms and the FFN half are shape-generic over (B, k, d)."""
+    h = layers.apply_norm(p["norm1"], x, cfg)
+    y, cache = attention.paged_verify_attention_block(
+        p["attn"], h, cfg, positions, cache, block_tables,
+        active=active, constrain=constrain)
+    x = x + y
+    h2 = layers.apply_norm(p["norm2"], x, cfg)
+    if cfg.family == "moe":
+        y2, _ = moe.moe_ffn(p["moe"], h2, cfg)
+    else:
+        y2 = layers.apply_mlp(p["mlp"], h2, cfg)
+    return x + y2, cache
+
+
+def apply_decoder_stack_verify(p, x, cfg, positions, cache, block_tables,
+                               active=None, constrain=None):
+    """Speculative verify over the whole stack: same scan shape as
+    ``apply_decoder_stack_decode`` (the block table is scan-invariant), but
+    each layer processes k tokens at once.  Paged caches exist only for
+    pure full-attention stacks, so there is no tail and no kind dispatch.
+    Returns (x (B, k, d), new_cache)."""
+    group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
+    assert all(k == "attn" for k in group_kinds) and not tail_kinds, (
+        f"speculative verify needs a pure attention stack, got "
+        f"{group_kinds} + {tail_kinds}")
+    g_cache, _ = cache
+
+    def body(x, xs):
+        gp, gc = xs
+        new_c = {}
+        for i, kind in enumerate(group_kinds):
+            x, nc = apply_block_verify(gp[f"b{i}_{kind}"], x, cfg, positions,
+                                       gc[f"b{i}"], block_tables,
+                                       active=active, constrain=constrain)
+            new_c[f"b{i}"] = nc
+        return x, new_c
+
+    x, new_g = jax.lax.scan(body, x, (p["groups"], g_cache))
+    return x, (new_g, [])
+
+
 def init_stack_cache(cfg, batch, seq_len, dtype=jnp.bfloat16):
     group_kinds, n_groups, tail_kinds = _stack_groups(cfg)
 

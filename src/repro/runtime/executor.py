@@ -33,6 +33,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import quantizer
+from repro.core.psi import QuantizedTensor
 from repro.kernels import ops
 from repro.models import kvcache as kvc
 from repro.runtime import sharding as shr
@@ -52,7 +54,8 @@ class Executor:
     """Owns mesh, placement, and the compiled serving entry points."""
 
     def __init__(self, cfg, params, *, max_batch: int, max_seq: int,
-                 mesh=None, model=None, n_blocks: int = None):
+                 mesh=None, model=None, n_blocks: int = None,
+                 speculative=None):
         if model is None:
             from repro.models import build_model   # lazy: models imports us
             model = build_model(cfg)
@@ -87,10 +90,46 @@ class Executor:
                 raise ValueError("n_blocks only applies to the paged cache "
                                  "layout (cfg.resolved_cache_layout)")
 
+        # ---- self-speculative decoding (DESIGN.md §"Self-speculative
+        # decoding"): the draft model is a narrower PSI view of the SAME
+        # checkpoint, derived code-space from the serving leaves ----
+        self.speculative = tuple(speculative) if speculative else None
+        if self.speculative is not None:
+            bits, k = self.speculative
+            if not self.paged:
+                raise ValueError("speculative decoding needs the paged "
+                                 "cache layout (cfg.resolved_cache_layout)")
+            if cfg.rope == "mrope":
+                raise ValueError("speculative verify does not support "
+                                 "mrope position encoding")
+            if not 1 <= k <= self.block_size:
+                raise ValueError(
+                    f"speculative k={k} must be in [1, block_size="
+                    f"{self.block_size}]: the k-token verify scatter needs "
+                    f"distinct in-block offsets")
+            if not any(isinstance(leaf, QuantizedTensor)
+                       for leaf in jax.tree_util.tree_leaves(
+                           params, is_leaf=lambda x: isinstance(
+                               x, QuantizedTensor))):
+                raise ValueError("speculative decoding derives its draft "
+                                 "from PSI-quantized serving params; "
+                                 "quantize first (--quant psiN)")
+            self.spec_bits, self.spec_k = bits, k
+        else:
+            self.spec_bits = self.spec_k = 0
+
         # ---- placement: params now, cache/input shardings precomputed ----
         self.param_shardings = shr.to_shardings(
             shr.param_specs(params, cfg, self.mesh, mode="serve"), self.mesh)
         self.params = jax.device_put(params, self.param_shardings)
+        if self.speculative is not None:
+            draft = quantizer.draft_param_tree(params, self.spec_bits)
+            self.draft_shardings = shr.to_shardings(
+                shr.param_specs(draft, cfg, self.mesh, mode="serve"),
+                self.mesh)
+            self.draft_params = jax.device_put(draft, self.draft_shardings)
+        else:
+            self.draft_params = None
 
         cache_shape = jax.eval_shape(
             lambda: self._init_cache_fn())
@@ -105,6 +144,11 @@ class Executor:
         if self.paged:
             step_inputs["block_table"] = jax.ShapeDtypeStruct(
                 (max_batch, self.n_bt), jnp.int32)
+        if self.speculative is not None:
+            # the verify pass feeds k tokens per slot; same slot-over-data
+            # rule as every other step input (dim 0 is the slot dim)
+            step_inputs["spec_tokens"] = jax.ShapeDtypeStruct(
+                (max_batch, self.spec_k), jnp.int32)
         self._step_shardings = shr.to_shardings(
             shr.serve_batch_specs(cfg, self.mesh, step_inputs), self.mesh)
 
@@ -165,6 +209,24 @@ class Executor:
             self._insert_burst = jax.jit(
                 self._insert_burst_fn_paged, donate_argnums=(0,),
                 out_shardings=self.cache_shardings)
+            if self.speculative is not None:
+                # the two (and only two) decode-side speculative shapes:
+                # the fused k-step draft scan and the k-token verify.  Same
+                # donation + pinned-out_shardings contract as _decode, so
+                # each compiles exactly once — with speculation on, plain
+                # _decode is never traced and the decode-side executable
+                # count is exactly 2 (asserted at serve warmup).
+                # draft emits its (B, k) tokens directly in the verify
+                # pass's spec_tokens sharding, so the host can chain
+                # draft -> verify without a device round-trip (the verify
+                # builds its token window on device from the draft output)
+                self._spec_draft = jax.jit(
+                    self._draft_fn_paged, donate_argnums=(5,),
+                    out_shardings=(self._step_shardings["spec_tokens"],
+                                   self.cache_shardings))
+                self._spec_verify = jax.jit(
+                    self._verify_fn_paged, donate_argnums=(6,),
+                    out_shardings=(tok_sh, self.cache_shardings))
         else:
             self._decode = jax.jit(
                 self._decode_fn, donate_argnums=(4,),
@@ -214,8 +276,17 @@ class Executor:
             # exists for.
             return self
         mesh = make_mesh_from_plan(plan, devices)
+        # Rebuild with the FULL construction config.  Regression (PR 7):
+        # dropping n_blocks here silently reset a custom pool size on
+        # remesh, shifting the scratch-block base (N - max_batch) under
+        # live block tables; every jitted paged entry point — decode,
+        # prefill_insert (+ prefix twin), burst insert, and the speculative
+        # draft/verify pair — is re-created by __init__, so all of them are
+        # re-pinned to the new mesh's shardings.
         return Executor(self.cfg, self.params, max_batch=self.max_batch,
-                        max_seq=self.max_seq, mesh=mesh, model=self.model)
+                        max_seq=self.max_seq, mesh=mesh, model=self.model,
+                        n_blocks=self.n_blocks if self.paged else None,
+                        speculative=self.speculative)
 
     def observe_step(self, step_times):
         """Feed per-host step times to the straggler monitor; returns its
@@ -270,6 +341,44 @@ class Executor:
                 pos[:, None, :], (pos.shape[0], 3, 1))
         logits, cache = self.model.decode_step(params, batch, cache,
                                                mesh=self.mesh)
+        return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _draft_fn_paged(self, params, token, pos, active, block_table,
+                        cache):
+        """Fused k-step DRAFT pass (DESIGN.md §"Self-speculative decoding"):
+        ``lax.scan`` over the standard decode body with the low-bit draft
+        params — one device dispatch drafts all k tokens, writing
+        draft-computed KV at positions [pos, pos+k) (the verify pass
+        re-scatters target KV over the same entries).  The block table is
+        scan-invariant: the host pre-allocates every block the round can
+        touch before calling.  Returns ((B, k) greedy drafts, cache)."""
+        def step(carry, _):
+            tok, p, kv = carry
+            batch = {"token": tok, "pos": p, "active": active,
+                     "block_table": block_table}
+            logits, kv = self.model.decode_step(params, batch, kv,
+                                                mesh=self.mesh)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            return (nxt, p + 1, kv), nxt[:, 0]
+
+        (_, _, cache), toks = jax.lax.scan(
+            step, (token, pos, cache), None, length=self.spec_k)
+        return jnp.moveaxis(toks, 0, 1), cache          # (B, k)
+
+    def _verify_fn_paged(self, params, token, drafts, pos0, active,
+                         block_table, cache):
+        """k-token VERIFY at the target width: one decode-shaped batched
+        pass (M = B*k rows through the same routed paged-attention kernel)
+        over the feed token followed by the first k-1 drafts — the window
+        is built ON DEVICE from the draft pass's output, so the host can
+        enqueue draft and verify back-to-back without syncing the drafts
+        in between.  Returns ((B, k) greedy verdicts, cache) — verdict j is
+        the target's next token after consuming tokens[:, :j+1]."""
+        tokens = jnp.concatenate([token, drafts[:, :self.spec_k - 1]],
+                                 axis=1)
+        logits, cache = self.model.verify_step(
+            params, {"tokens": tokens, "pos0": pos0, "active": active,
+                     "block_table": block_table}, cache, mesh=self.mesh)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
     def _prefill_insert_fn(self, params, tokens, true_lens, cache, slot):
@@ -393,6 +502,36 @@ class Executor:
         return self._decode(self.params, put["token"], put["pos"],
                             put["active"], cache)
 
+    def draft(self, token, pos, active, cache, block_table):
+        """One fused k-step draft pass with the low-bit view of the serving
+        checkpoint.  Same input contract as :meth:`decode`; returns
+        ((B, k) draft tokens, cache)."""
+        put = {"token": jnp.asarray(token), "pos": jnp.asarray(pos),
+               "active": jnp.asarray(active),
+               "block_table": jnp.asarray(block_table)}
+        put = jax.device_put(
+            put, {k: self._step_shardings[k] for k in put})
+        return self._spec_draft(self.draft_params, put["token"], put["pos"],
+                                put["active"], put["block_table"], cache)
+
+    def verify(self, token, drafts, pos0, active, cache, block_table):
+        """One k-token verify pass at the target width.  ``token`` (B, 1)
+        is the round's feed token, ``drafts`` (B, k) the draft pass's
+        output (device array or host) — the verify window [token,
+        drafts[:, :k-1]] is assembled on device, so passing the DeviceArray
+        straight from :meth:`draft` chains the two dispatches without a
+        host sync.  ``pos0`` (B, 1) is the feed position.  Returns
+        ((B, k) target verdicts, cache)."""
+        put = {"token": jnp.asarray(token),
+               "spec_tokens": jnp.asarray(drafts),
+               "pos": jnp.asarray(pos0), "active": jnp.asarray(active),
+               "block_table": jnp.asarray(block_table)}
+        put = jax.device_put(
+            put, {k: self._step_shardings[k] for k in put})
+        return self._spec_verify(self.params, put["token"],
+                                 put["spec_tokens"], put["pos"],
+                                 put["active"], put["block_table"], cache)
+
     # jit-cache introspection for the shape-stability tests / stats
     def decode_cache_size(self) -> int:
         # _cache_size is a private jax API; degrade to -1 (unknown) rather
@@ -410,3 +549,13 @@ class Executor:
         if self.paged:
             out["prefill_insert_prefix"] = sz(self._prefill_insert_prefix)
         return out
+
+    def spec_cache_sizes(self) -> dict:
+        """Compiled decode-side executable counts under speculation: the
+        compile-once contract becomes compile-exactly-TWICE — one draft
+        scan + one verify shape, and the plain decode step never traces
+        (``decode == 0``).  Asserted at serve warmup."""
+        sz = lambda f: getattr(f, "_cache_size", lambda: -1)()
+        return {"draft": sz(self._spec_draft),
+                "verify": sz(self._spec_verify),
+                "decode": sz(self._decode)}

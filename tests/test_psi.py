@@ -205,3 +205,71 @@ class TestFloatQuant:
         q, scale = psi.quantize_activations_int8(x)
         err = jnp.abs(q.astype(jnp.float32) * scale - x).max()
         assert float(err) <= float(scale) * 0.5 + 1e-6
+
+
+class TestDraftView:
+    """Self-speculative draft derivation (DESIGN.md §"Self-speculative
+    decoding"): ``draft_view(b)`` rescales the STORED codes onto the
+    narrower grid and must equal quantizing the dequantized weights
+    directly to ``b`` bits — symmetric scales put the per-channel max |code|
+    exactly at qmax, so the rescale is the same rounding problem."""
+
+    @given(st.sampled_from([2, 3, 4, 5]), st.integers(1, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_view_equals_direct_quantization(self, dbits, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(16, 24)).astype(np.float32))
+        q8 = psi.quantize_weights(w, 8, axis=(0,))
+        view = q8.draft_view(dbits)
+        direct = psi.quantize_weights(
+            q8.dequantize(jnp.float32), dbits, axis=(0,))
+        assert view.fmt.bits == dbits and not view.packed
+        np.testing.assert_array_equal(np.asarray(view.codes),
+                                      np.asarray(direct.codes))
+        np.testing.assert_allclose(np.asarray(view.scale),
+                                   np.asarray(direct.scale), rtol=1e-6)
+
+    @pytest.mark.parametrize("dbits", [2, 3])
+    def test_packed_view_dequantize_and_gather(self, dbits):
+        """The packed sub-byte storage of a view is bit-identical to the
+        packed direct quantization through BOTH read paths: full
+        ``dequantize`` and the embedding-style ``gather_rows``."""
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(size=(32, 24)).astype(np.float32))
+        q8 = psi.quantize_weights(w, 8, axis=(1,))       # per-row scales
+        view = q8.draft_view(dbits).pack()
+        direct = psi.quantize_weights(
+            q8.dequantize(jnp.float32), dbits, axis=(1,)).pack()
+        assert view.packed and direct.packed
+        assert view.data.dtype == direct.data.dtype == jnp.uint8
+        np.testing.assert_array_equal(np.asarray(view.data),
+                                      np.asarray(direct.data))
+        np.testing.assert_allclose(
+            np.asarray(view.dequantize(jnp.float32)),
+            np.asarray(direct.dequantize(jnp.float32)), rtol=1e-6)
+        ids = jnp.asarray([0, 3, 3, 31, 17])
+        np.testing.assert_allclose(
+            np.asarray(view.gather_rows(ids, jnp.float32)),
+            np.asarray(direct.gather_rows(ids, jnp.float32)), rtol=1e-6)
+
+    def test_packed_source_stays_packed(self):
+        """A view extracted from a PACKED serving leaf comes back packed
+        (the serving layout is preserved) and still equals the direct
+        quantization of the dequantized weights."""
+        rng = np.random.default_rng(2)
+        w = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+        q5 = psi.quantize_weights(w, 5, axis=(0,)).pack()
+        view = q5.draft_view(2)
+        assert view.packed and view.fmt.bits == 2
+        direct = psi.quantize_weights(
+            q5.dequantize(jnp.float32), 2, axis=(0,))
+        np.testing.assert_array_equal(np.asarray(view.codes),
+                                      np.asarray(direct.codes))
+
+    def test_view_degenerate_and_widening(self):
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+        q3 = psi.quantize_weights(w, 3, axis=(0,))
+        assert q3.draft_view(3) is q3          # same width: no-op
+        with pytest.raises(ValueError, match="narrows only"):
+            q3.draft_view(5)

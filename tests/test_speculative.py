@@ -1,0 +1,358 @@
+"""Self-speculative decoding tests (DESIGN.md §"Self-speculative
+decoding"): greedy acceptance must keep the served token streams
+bit-identical to plain decode for EVERY (draft_bits, k) and every cache
+combination — the draft pass is an optimization, never a semantics
+change.  Covers the fuzz matrix over k x draft_bits, the int8-KV and
+prefix-cache compositions, an adversarial zero-acceptance draft, the
+compile-count contract, the remesh regression, and the summarize
+accounting satellites."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.quantizer import fake_quant_param_tree
+from repro.launch.scheduler import Request, summarize
+from repro.launch.serve import Server, parse_spec_spec
+from repro.models import build_model
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(snippet: str, devices: int = 8, timeout: int = 480) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(snippet)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.fixture(scope="module")
+def qwen_setup():
+    """Reduced qwen3-8b, QAT-preconditioned at 3 bits before the psi8
+    serving quantization, so low-bit draft views actually agree with the
+    target often enough to exercise the multi-accept emit path (random
+    init accepts ~0 and would only ever cover the a=0 branch)."""
+    cfg = reduced_config(get_config("qwen3-8b"))
+    model = build_model(cfg)
+    params = fake_quant_param_tree(model.init(jax.random.PRNGKey(0)), 3)
+    params = model.quantize(params, 8)
+    cfg = dataclasses.replace(cfg, quant_mode="psi8")
+    return cfg, params
+
+
+def _trace(cfg, seed=0, n=4, budgets=(4, 7, 3, 6)):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=(5 + 3 * i,)).astype(np.int32),
+                    max_new=budgets[i % len(budgets)], arrival_s=0.001 * i)
+            for i in range(n)]
+
+
+def _toks(done):
+    return {r.rid: tuple(r.tokens) for r in done}
+
+
+@pytest.fixture(scope="module")
+def baseline(qwen_setup):
+    """Plain-decode tokens for the shared trace: the oracle every
+    speculative configuration must reproduce exactly."""
+    cfg, params = qwen_setup
+    server = Server(cfg, params, max_batch=2, max_seq=64)
+    done, stats = server.serve(_trace(cfg), continuous=True)
+    assert stats["decode_compiles"] == 1
+    return _toks(done)
+
+
+class TestSpecTokenIdentity:
+    @pytest.mark.parametrize("dbits", [2, 3])
+    @pytest.mark.parametrize("k", [2, 4, 8])
+    def test_fuzz_matrix_identical_to_plain_decode(self, qwen_setup,
+                                                   baseline, dbits, k):
+        """Acceptance fuzz: every (draft_bits, k) cell serves the shared
+        trace token-identically to plain decode, compiles exactly the
+        draft+verify pair (and NO plain decode shape), and returns every
+        pool block."""
+        cfg, params = qwen_setup
+        server = Server(cfg, params, max_batch=2, max_seq=64,
+                        speculative=(dbits, k))
+        done, stats = server.serve(_trace(cfg), continuous=True)
+        assert _toks(done) == baseline
+        sp = stats["speculative"]
+        assert sp["spec_compiles"] == {"draft": 1, "verify": 1, "decode": 0}
+        assert (sp["draft_bits"], sp["k"]) == (dbits, k)
+        assert sp["rounds"] > 0 and sp["accepted_draft_tokens"] >= 0
+        assert stats["blocks_free_end"] == stats["n_blocks"]
+
+    def test_static_mode_identical(self, qwen_setup, baseline):
+        """Batch-synchronous scheduling under speculation stays identical
+        too — rounds are per-step, not per-policy."""
+        cfg, params = qwen_setup
+        server = Server(cfg, params, max_batch=2, max_seq=64,
+                        speculative=(3, 4))
+        done, _ = server.serve(_trace(cfg), continuous=False)
+        assert _toks(done) == baseline
+
+    def test_int8_kv_identical(self):
+        """Speculation over the quantized KV pool: draft writes, verify
+        re-scatters, and the stale rejected tail all round-trip through
+        the int8 scale pools without diverging from plain decode."""
+        cfg = reduced_config(get_config("qwen3-8b"), kv_quant="int8")
+        model = build_model(cfg)
+        params = fake_quant_param_tree(model.init(jax.random.PRNGKey(0)), 3)
+        params = model.quantize(params, 8)
+        cfg = dataclasses.replace(cfg, quant_mode="psi8")
+        plain = Server(cfg, params, max_batch=2, max_seq=64)
+        spec = Server(cfg, params, max_batch=2, max_seq=64,
+                      speculative=(3, 4))
+        done_p, _ = plain.serve(_trace(cfg, seed=1), continuous=True)
+        done_s, stats = spec.serve(_trace(cfg, seed=1), continuous=True)
+        assert _toks(done_p) == _toks(done_s)
+        assert stats["blocks_free_end"] == stats["n_blocks"]
+
+    def test_prefix_cache_composition(self, qwen_setup):
+        """Speculation + shared-prefix reuse: spec-on serves a shared-
+        prefix trace identically to spec-off (both prefix-on), still with
+        measured hits and an LRU-drained allocator."""
+        cfg, params = qwen_setup
+        cfg = dataclasses.replace(cfg, prefix_cache=True)
+        rng = np.random.default_rng(3)
+        shared = rng.integers(0, cfg.vocab_size, size=(32,)).astype(np.int32)
+
+        def mk():
+            reqs = []
+            for i in range(5):
+                tail = rng.integers(0, cfg.vocab_size, size=(4,)) \
+                    .astype(np.int32)
+                reqs.append(Request(rid=i,
+                                    prompt=np.concatenate([shared, tail]),
+                                    max_new=3 + i % 4, arrival_s=0.001 * i))
+            return reqs
+
+        trace = mk()
+        clone = lambda: [dataclasses.replace(r, tokens=[]) for r in trace]
+        off = Server(cfg, params, max_batch=2, max_seq=96)
+        on = Server(cfg, params, max_batch=2, max_seq=96,
+                    speculative=(3, 4))
+        assert off.prefix_enabled and on.prefix_enabled
+        done_off, _ = off.serve(clone(), continuous=True)
+        done_on, stats = on.serve(clone(), continuous=True)
+        assert _toks(done_off) == _toks(done_on)
+        assert stats["prefix_cache"]["hits"] > 0
+        assert stats["blocks_free_end"] == stats["n_blocks"]
+
+    def test_adversarial_draft_degrades_to_plain_decode(self, qwen_setup,
+                                                        baseline):
+        """Forced-zero acceptance: a draft pass that returns token id -1
+        (never a valid argmax) must reject at position 0 every round, so
+        the engine emits exactly one verified token per round — the plain-
+        decode stream — while the corrupted drafts' stale KV writes are
+        overwritten before any later read, and no block leaks."""
+        cfg, params = qwen_setup
+        server = Server(cfg, params, max_batch=2, max_seq=64,
+                        speculative=(3, 4))
+        real_draft = server.executor.draft
+
+        def hostile_draft(token, pos, active, cache, block_table):
+            drafts, cache = real_draft(token, pos, active, cache,
+                                       block_table)
+            return jnp.full_like(drafts, -1), cache
+
+        server.executor.draft = hostile_draft
+        done, stats = server.serve(_trace(cfg), continuous=True)
+        sp = stats["speculative"]
+        assert _toks(done) == baseline
+        assert sp["accepted_draft_tokens"] == 0
+        assert sp["mean_accepted"] == 0.0
+        assert stats["accepted_per_step"] == 0.0
+        assert stats["blocks_free_end"] == stats["n_blocks"]
+
+
+class TestSpecConstruction:
+    def test_parse_spec_spec(self):
+        assert parse_spec_spec(None) is None
+        assert parse_spec_spec("off") is None
+        assert parse_spec_spec("3:4") == (3, 4)
+        assert parse_spec_spec("2:8") == (2, 8)
+        with pytest.raises(ValueError):
+            parse_spec_spec("3")
+        with pytest.raises(ValueError):
+            parse_spec_spec("3:0")
+
+    def test_requires_paged_layout(self, qwen_setup):
+        cfg, params = qwen_setup
+        dense = dataclasses.replace(cfg, cache_layout="dense")
+        with pytest.raises(ValueError, match="paged"):
+            Server(dense, params, max_batch=2, max_seq=64,
+                   speculative=(3, 4))
+
+    def test_k_bounded_by_block_size(self, qwen_setup):
+        cfg, params = qwen_setup
+        with pytest.raises(ValueError, match="block"):
+            Server(cfg, params, max_batch=2, max_seq=64,
+                   speculative=(3, cfg.cache_block_size + 1))
+
+    def test_requires_quantized_params(self):
+        """A float checkpoint has no stored codes to derive a draft view
+        from — constructing a speculative engine on it must fail loudly."""
+        cfg = reduced_config(get_config("qwen3-8b"))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))    # float, unquantized
+        with pytest.raises(ValueError, match="[Qq]uantized"):
+            Server(cfg, params, max_batch=2, max_seq=64,
+                   speculative=(3, 4))
+
+    def test_single_device_remesh_is_noop(self, qwen_setup):
+        cfg, params = qwen_setup
+        server = Server(cfg, params, max_batch=2, max_seq=64,
+                        speculative=(3, 4))
+        assert server.executor.remesh() is server.executor
+
+
+class TestSpecAccounting:
+    def test_summarize_zero_finished_is_strict_json(self):
+        stats = summarize([], wall_s=1.0)
+        assert stats["accepted_per_step"] == 0.0
+        assert stats["draft_overhead_s"] == 0.0
+
+    def test_summarize_skips_nonspeculative_requests(self):
+        """Requests that never ran a speculative round report NaN
+        accepted_per_step and must be skipped, not averaged as zero."""
+        reqs = []
+        for i, (rounds, accepted) in enumerate([(0, 0), (4, 12), (2, 2)]):
+            r = Request(rid=i, prompt=np.zeros((4,), np.int32), max_new=4,
+                        arrival_s=0.0)
+            r.admit_s, r.first_token_s, r.finish_s = 0.1, 0.2, 1.0
+            r.tokens = [1, 2]
+            r.spec_rounds, r.spec_accepted = rounds, accepted
+            r.draft_s = 0.25
+            reqs.append(r)
+        assert np.isnan(reqs[0].accepted_per_step)
+        stats = summarize(reqs, wall_s=2.0)
+        assert stats["accepted_per_step"] == pytest.approx(2.0)  # (3+1)/2
+        assert stats["draft_overhead_s"] == pytest.approx(0.75)
+
+    def test_all_nonspeculative_degrades_to_zero(self):
+        r = Request(rid=0, prompt=np.zeros((4,), np.int32), max_new=4,
+                    arrival_s=0.0)
+        r.admit_s, r.first_token_s, r.finish_s = 0.1, 0.2, 1.0
+        r.tokens = [1]
+        stats = summarize([r], wall_s=1.0)
+        assert stats["accepted_per_step"] == 0.0
+        assert stats["draft_overhead_s"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Multi-device: forced 8-CPU subprocesses (same pattern as
+# test_distributed.py — the device-count flag must not leak in-process).
+# ---------------------------------------------------------------------------
+def test_spec_sharded_tokens_identical():
+    """Speculative serving on a forced 8-device (4, 2) mesh is token-
+    identical to the single-device SPEC engine and to plain decode, with
+    the same draft+verify-only compile contract."""
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.core.quantizer import fake_quant_param_tree
+        from repro.launch.mesh import make_mesh
+        from repro.launch.scheduler import Request
+        from repro.launch.serve import Server
+        from repro.models import build_model
+
+        cfg = reduced_config(get_config("qwen3-8b"))
+        model = build_model(cfg)
+        params = fake_quant_param_tree(model.init(jax.random.PRNGKey(0)), 3)
+        params = model.quantize(params, 8)
+        cfg = dataclasses.replace(cfg, quant_mode="psi8")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(6 + 2 * i,))
+                   .astype(np.int32) for i in range(6)]
+        def mk():
+            return [Request(rid=i, prompt=prompts[i], max_new=mn,
+                            arrival_s=0.0)
+                    for i, mn in enumerate([3, 7, 2, 5, 4, 6])]
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+
+        plain = Server(cfg, params, max_batch=4, max_seq=64)
+        base = toks(plain.serve(mk(), continuous=True)[0])
+        s1 = Server(cfg, params, max_batch=4, max_seq=64,
+                    speculative=(3, 4))
+        d1, st1 = s1.serve(mk(), continuous=True)
+        s8 = Server(cfg, params, max_batch=4, max_seq=64,
+                    speculative=(3, 4),
+                    mesh=make_mesh((4, 2), ("data", "model")))
+        d8, st8 = s8.serve(mk(), continuous=True)
+        assert st8["slot_shards"] == 4
+        assert toks(d1) == base, "spec 1x1 diverged from plain"
+        assert toks(d8) == base, "spec (4,2) diverged from plain"
+        for st in (st1, st8):
+            assert st["speculative"]["spec_compiles"] == \\
+                {"draft": 1, "verify": 1, "decode": 0}
+        print("OK", st8["slot_shards"])
+    """)
+    assert "OK 4" in out
+
+
+def test_remesh_preserves_spec_and_pool_then_serves():
+    """Satellite regression (PR 7): remesh must rebuild with the FULL
+    construction config.  An executor built with a custom n_blocks and a
+    speculative pair, remeshed onto a survivor subset, must carry both
+    through — and a Server running on the remeshed executor must still
+    serve token-identically to plain decode."""
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.core.quantizer import fake_quant_param_tree
+        from repro.launch.mesh import make_mesh
+        from repro.launch.scheduler import Request
+        from repro.launch.serve import Server
+        from repro.models import build_model
+        from repro.runtime.executor import Executor
+
+        cfg = reduced_config(get_config("qwen3-8b"))
+        model = build_model(cfg)
+        params = fake_quant_param_tree(model.init(jax.random.PRNGKey(0)), 3)
+        params = model.quantize(params, 8)
+        cfg = dataclasses.replace(cfg, quant_mode="psi8")
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(8,))
+                   .astype(np.int32) for _ in range(4)]
+        def mk():
+            return [Request(rid=i, prompt=prompts[i], max_new=mn,
+                            arrival_s=0.0)
+                    for i, mn in enumerate([3, 6, 4, 5])]
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+
+        base = toks(Server(cfg, params, max_batch=2, max_seq=64)
+                    .serve(mk(), continuous=True)[0])
+
+        ex = Executor(cfg, params, max_batch=2, max_seq=64,
+                      mesh=make_mesh((4, 2), ("data", "model")),
+                      n_blocks=10, speculative=(3, 4))
+        ex2 = ex.remesh(jax.devices()[:4], model_parallel=2)
+        assert ex2 is not ex
+        assert ex2.mesh.devices.size == 4, ex2.mesh.devices.shape
+        # the PR 7 regression: these were silently dropped on rebuild
+        assert ex2.n_blocks == ex.n_blocks == 10, ex2.n_blocks
+        assert ex2.speculative == (3, 4), ex2.speculative
+
+        server = Server(cfg, params, max_batch=2, max_seq=64,
+                        executor=ex2, speculative=(3, 4))
+        done, stats = server.serve(mk(), continuous=True)
+        assert toks(done) == base, "remeshed spec engine diverged"
+        assert stats["speculative"]["spec_compiles"] == \\
+            {"draft": 1, "verify": 1, "decode": 0}
+        print("OK remesh", ex2.n_blocks)
+    """)
+    assert "OK remesh 10" in out
