@@ -74,6 +74,11 @@ class PrefixCache:
         self.tokens_reused = 0
         self.published_blocks = 0
         self.evicted_blocks = 0
+        # restore path (DESIGN.md §3 "SLO scheduling"): lookups on behalf
+        # of a PREEMPTED request re-attaching its own published KV — the
+        # swap-layer traffic, reported separately from organic prefix hits
+        self.restores = 0
+        self.restored_tokens = 0
 
     @staticmethod
     def hit_alignment_step(block_size: int, align_tokens: int) -> int:
@@ -126,13 +131,19 @@ class PrefixCache:
         for k in reversed(chain_keys):
             self._entries.move_to_end(k)
 
-    def note_lookup(self, hit_blocks: List[int]) -> None:
+    def note_lookup(self, hit_blocks: List[int],
+                    restore: bool = False) -> None:
         """Record one admission's lookup outcome (kept separate from
-        ``lookup`` so head-of-line retries don't inflate the hit rate)."""
+        ``lookup`` so head-of-line retries don't inflate the hit rate).
+        ``restore=True`` marks a preempted request's re-admission — its
+        hit tokens are ALSO counted as swap-restore traffic."""
         self.lookups += 1
         if hit_blocks:
             self.hits += 1
             self.tokens_reused += len(hit_blocks) * self.block_size
+            if restore:
+                self.restores += 1
+                self.restored_tokens += len(hit_blocks) * self.block_size
 
     # ------------------------------------------------------------ publish
     def publish(self, prompt: np.ndarray, held_blocks: List[int],
@@ -199,6 +210,8 @@ class PrefixCache:
             "hits": self.hits,
             "hit_rate": (self.hits / self.lookups if self.lookups else 0.0),
             "tokens_reused": self.tokens_reused,
+            "restores": self.restores,
+            "restored_tokens": self.restored_tokens,
             "published_blocks": self.published_blocks,
             "evicted_blocks": self.evicted_blocks,
             "entries": len(self._entries),

@@ -4,13 +4,20 @@ Orca-style continuous batching (DESIGN.md §3): the decode step is a fixed
 ``(max_batch, 1)`` tensor over ``max_batch`` *slots*; the scheduler owns which
 request occupies which slot.  New requests are admitted into free slots
 mid-decode, sequences retire at EOS / their own ``max_new`` (freeing the slot
-immediately), and a FIFO waiting queue preserves arrival order.  The engine
-(``repro.launch.serve``) is the device half; this module is pure host-side
-bookkeeping — request queue, Poisson arrival simulation, slot allocation, and
-per-request latency accounting — so it is unit-testable without a model.
+immediately), and a waiting queue orders admission — FIFO by default, or by
+an SLO policy's aged priority key (``repro.launch.slo``, DESIGN.md §3 "SLO
+scheduling").  Under an SLO policy the scheduler also supports *preemption*:
+``preempt`` evicts a running request from its slot, publishes its pool
+blocks into the prefix cache (so resume is a cheap suffix re-prefill), and
+re-queues it; accounting (``queue_s``/``ttft_s``) survives re-admission.
+The engine (``repro.launch.serve``) is the device half; this module is pure
+host-side bookkeeping — request queue, Poisson arrival simulation, slot
+allocation, and per-request latency accounting — so it is unit-testable
+without a model.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 from collections import deque
@@ -30,16 +37,25 @@ class Request:
     prompt: np.ndarray                  # (S,) int32 token ids
     max_new: int                        # per-request generation budget
     arrival_s: float = 0.0              # trace time the request shows up
+    # --- SLO class (DESIGN.md §3 "SLO scheduling"): lower = more urgent;
+    # the FIFO scheduler ignores it, an SLOPolicy orders admission by it ---
+    priority: int = 0
+    slo_class: str = ""                 # class name, for per-class reporting
 
     # --- engine-filled accounting ---
-    admit_s: Optional[float] = None     # admitted into a decode slot
+    admit_s: Optional[float] = None     # FIRST admission into a decode slot
     first_token_s: Optional[float] = None
     finish_s: Optional[float] = None
     slot: Optional[int] = None          # slot the request decoded in
     tokens: List[int] = dataclasses.field(default_factory=list)
+    token_s: List[float] = dataclasses.field(default_factory=list)
+    # --- preemption accounting (DESIGN.md §3 "SLO scheduling") ---
+    preemptions: int = 0                # times evicted from a slot mid-serve
+    prefilled_tokens: int = 0           # tokens the engine actually forwarded
     # --- prefix-cache accounting (DESIGN.md §3 "Prefix cache") ---
     prefix_blocks: List[int] = dataclasses.field(default_factory=list)
-    prefix_hit_tokens: int = 0          # prompt tokens served from the cache
+    prefix_hit_tokens: int = 0          # tokens ever served from the cache
+    #                                     (cumulative across re-admissions)
     # --- speculative-decode accounting (DESIGN.md "Self-speculative") ---
     spec_rounds: int = 0                # draft+verify rounds this request ran
     spec_accepted: int = 0              # draft tokens accepted across rounds
@@ -81,12 +97,42 @@ class Request:
     def out(self) -> np.ndarray:
         return np.asarray(self.tokens, np.int32)
 
+    @property
+    def full_seq(self) -> np.ndarray:
+        """Prompt followed by everything emitted so far — the token sequence
+        a preempted request must restore before decoding can continue (the
+        re-admission prefix-cache lookup runs over THIS, not the prompt)."""
+        if not self.tokens:
+            return self.prompt
+        return np.concatenate([self.prompt,
+                               np.asarray(self.tokens, np.int32)])
+
+    def emit(self, token: int, now: float) -> None:
+        """Record one generated token at wall time ``now``: sets
+        ``first_token_s`` exactly once (a restore after preemption must NOT
+        reset TTFT) and timestamps the token for inter-token latency."""
+        if self.first_token_s is None:
+            self.first_token_s = now
+        self.tokens.append(int(token))
+        self.token_s.append(float(now))
+
+    @property
+    def itl_gaps(self) -> np.ndarray:
+        """Inter-token gaps (seconds) between consecutive emissions; empty
+        for 0- and 1-token requests (no gap exists — they must contribute
+        nothing to the percentiles, not zeros)."""
+        if len(self.token_s) < 2:
+            return np.empty((0,), np.float64)
+        return np.diff(np.asarray(self.token_s, np.float64))
+
 
 def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
                   max_new: int, vocab_size: int, seed: int = 0,
                   min_new: Optional[int] = None,
                   prompt_jitter: int = 0,
-                  shared_prefix_len: int = 0) -> List[Request]:
+                  shared_prefix_len: int = 0,
+                  priority_mix: Optional[Sequence[Tuple[str, int, float]]]
+                  = None) -> List[Request]:
     """Simulated open-loop arrival process: exponential inter-arrival times at
     ``rate_rps`` requests/s, heterogeneous decode budgets in
     ``[min_new, max_new]`` (default min_new: ``max(1, max_new // 4)``; the
@@ -98,6 +144,11 @@ def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
     tokens to every prompt — the shared-system-prompt traffic shape the
     prefix cache (DESIGN.md §3) exists for; ``prompt_len`` then sizes only
     the per-request unique tail.
+
+    ``priority_mix`` draws each request's SLO class i.i.d. from a weighted
+    mix of ``(class_name, priority, weight)`` entries (weights need not sum
+    to 1; they are normalized).  ``None`` leaves every request at priority 0
+    with no class — the FIFO-equivalent trace.
     """
     # rate_rps == 0 used to raise a bare ZeroDivisionError below, and a
     # negative rate silently produced a time-REVERSED trace (negative
@@ -114,6 +165,16 @@ def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
         raise ValueError(f"min_new={min_new} exceeds max_new={max_new}")
     shared = (rng.integers(0, vocab_size, size=(shared_prefix_len,))
               .astype(np.int32) if shared_prefix_len else None)
+    mix_p = None
+    if priority_mix is not None:
+        if not priority_mix:
+            raise ValueError("priority_mix must be a non-empty sequence of "
+                             "(class_name, priority, weight)")
+        w = np.asarray([float(m[2]) for m in priority_mix], np.float64)
+        if (w < 0).any() or w.sum() <= 0:
+            raise ValueError(f"priority_mix weights must be non-negative "
+                             f"with a positive sum, got {list(w)}")
+        mix_p = w / w.sum()
     reqs, t = [], 0.0
     for i in range(n_requests):
         t += float(rng.exponential(1.0 / rate_rps))
@@ -124,9 +185,14 @@ def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
         prompt = rng.integers(0, vocab_size, size=(plen,)).astype(np.int32)
         if shared is not None:
             prompt = np.concatenate([shared, prompt])
+        name, prio = "", 0
+        if mix_p is not None:
+            name, prio, _ = priority_mix[int(rng.choice(len(mix_p),
+                                                        p=mix_p))]
         reqs.append(Request(rid=i, prompt=prompt,
                             max_new=int(rng.integers(min_new, max_new + 1)),
-                            arrival_s=t))
+                            arrival_s=t, priority=int(prio),
+                            slo_class=str(name)))
     return reqs
 
 
@@ -287,6 +353,28 @@ class BlockAllocator:
                 f"{self.reserved_total} already promised")
         self._reserved[rid] = n
 
+    def reserved_of(self, rid: int) -> int:
+        """Blocks still promised (reserved, not yet allocated) to ``rid``."""
+        return self._reserved.get(rid, 0)
+
+    def grow_reserve(self, rid: int, n: int = 1) -> None:
+        """Grow ``rid``'s outstanding reservation by ``n`` blocks — the
+        optimistic-admission pressure path (DESIGN.md §3 "SLO scheduling"):
+        a request admitted on EXPECTED usage that outruns it gets more
+        reservation once the engine has freed capacity (eviction or
+        preemption).  Same availability gate as ``reserve``."""
+        if n <= 0:
+            raise ValueError(f"grow_reserve needs n > 0, got {n}")
+        if rid not in self._reserved:
+            raise ValueError(
+                f"request {rid} holds no reservation to grow — grow_reserve "
+                f"is for admitted requests only")
+        if not self.can_reserve(n):
+            raise ValueError(
+                f"cannot grow reservation by {n}: {self.free_count} free, "
+                f"{self.reserved_total} already promised")
+        self._reserved[rid] += n
+
     def alloc(self, rid: int, shard: Optional[int] = None) -> int:
         """Take one exclusive block for ``rid``, drawing down its
         reservation.  ``shard`` is a placement hint (the slot's data
@@ -390,7 +478,8 @@ class BlockAllocator:
 # The scheduler proper.
 # ---------------------------------------------------------------------------
 class Scheduler:
-    """FIFO admission of arrived requests into free decode slots.
+    """Admission of arrived requests into free decode slots — FIFO by
+    default, or ordered by an SLO policy's aged-priority key.
 
     Drive it with a monotonically non-decreasing ``now`` (seconds since serve
     start):
@@ -399,6 +488,13 @@ class Scheduler:
         for slot, req in sched.admit(now): ...prefill + insert...
         ...run one decode step...
         sched.retire(slot, now)          # at EOS / max_new
+        sched.preempt(slot, now, ...)    # under pool pressure (SLO mode)
+
+    ``policy`` is any object with a ``sort_key(req)`` callable whose key is
+    TIME-INVARIANT (e.g. ``priority + arrival_s / aging_s`` — the relative
+    order of two requests never changes as the clock advances), so the
+    waiting queue can stay an insertion-sorted list instead of being
+    re-sorted every step.  ``None`` means FIFO: key ``(arrival_s, rid)``.
     """
 
     def __init__(self, requests: Sequence[Request], max_batch: int,
@@ -406,7 +502,7 @@ class Scheduler:
                  shard_of: Optional[Sequence[int]] = None,
                  blocks: Optional[BlockAllocator] = None,
                  blocks_needed: Optional[Callable[[Request], int]] = None,
-                 prefix=None):
+                 prefix=None, policy=None):
         for r in requests:
             if r.admit_s is not None or r.tokens:
                 raise ValueError(
@@ -414,7 +510,11 @@ class Scheduler:
                     f"mutated in place); build a fresh trace per serve")
         self._pending = deque(sorted(requests,
                                      key=lambda r: (r.arrival_s, r.rid)))
-        self.waiting: deque = deque()
+        self.policy = policy
+        self._key: Callable[[Request], Tuple] = (
+            policy.sort_key if policy is not None
+            else (lambda r: (r.arrival_s, r.rid)))
+        self.waiting: List[Request] = []
         self.slots = SlotAllocator(max_batch, n_shards, shard_of)
         # Paged cache (DESIGN.md §3): admission additionally gated on block
         # availability — a free slot is not enough, the request's worst-case
@@ -442,16 +542,27 @@ class Scheduler:
     # ---- queue movement ----
     def poll(self, now: float) -> int:
         """Move requests whose arrival time has passed into the waiting
-        queue (arrival order).  Returns how many arrived."""
+        queue (policy order; FIFO when no policy).  Returns how many
+        arrived."""
         n = 0
         while self._pending and self._pending[0].arrival_s <= now:
-            self.waiting.append(self._pending.popleft())
+            bisect.insort(self.waiting, self._pending.popleft(),
+                          key=self._key)
             n += 1
         return n
 
+    def _requeue(self, req: Request) -> None:
+        """Put a preempted request back into the waiting queue at its policy
+        position.  Its time-invariant sort key is unchanged by preemption,
+        so it slots back ahead of anything lower-priority / later-arrived."""
+        bisect.insort(self.waiting, req, key=self._key)
+
     def admit(self, now: float) -> List[Tuple[int, Request]]:
-        """Admit waiting requests (FIFO) into free slots; returns the new
-        (slot, request) assignments for the engine to prefill + insert."""
+        """Admit waiting requests (policy order) into free slots; returns
+        the new (slot, request) assignments for the engine to prefill +
+        insert.  For a re-admitted (preempted) request the prefix lookup
+        runs over ``full_seq`` — prompt plus everything already generated —
+        so a prior publish makes restore a suffix-only re-prefill."""
         admitted = []
         while self.waiting and self.slots.free_count:
             req = self.waiting[0]
@@ -461,7 +572,7 @@ class Scheduler:
                     break      # nothing changed since the last failure
                 hit: List[int] = []
                 if self.prefix is not None:
-                    hit = self.prefix.lookup(req.prompt)
+                    hit = self.prefix.lookup(req.full_seq)
                     if hit:
                         # attach BEFORE any eviction attempt: the extra
                         # reference makes the matched entries unevictable
@@ -476,20 +587,54 @@ class Scheduler:
                             self.blocks.release(req.rid)
                         self._hol_blocked = (req.rid,
                                              self.blocks.capacity_version)
-                        break  # FIFO: head-of-line waits for capacity
+                        break  # head-of-line waits for capacity
                 self.blocks.reserve(req.rid, need)
                 req.prefix_blocks = list(hit)
-                req.prefix_hit_tokens = (len(hit) * self.prefix.block_size
-                                         if self.prefix is not None else 0)
+                # CUMULATIVE across re-admissions: restore hits are real
+                # cache service too (queue_s/ttft_s keep first-admission
+                # semantics via the ``admit_s is None`` guard below)
+                req.prefix_hit_tokens += (len(hit) * self.prefix.block_size
+                                          if self.prefix is not None else 0)
                 if self.prefix is not None:
-                    self.prefix.note_lookup(hit)
-            self.waiting.popleft()
+                    self.prefix.note_lookup(hit,
+                                            restore=req.preemptions > 0)
+            self.waiting.pop(0)
             slot = self.slots.alloc(req.rid)
             req.slot = slot
-            req.admit_s = now
+            if req.admit_s is None:      # FIRST admission only — queue_s
+                req.admit_s = now        # must not shrink on re-admission
             self.running[slot] = req
             admitted.append((slot, req))
         return admitted
+
+    def preempt(self, slot: int, now: float,
+                covered: Optional[int] = None) -> Request:
+        """Evict the request in ``slot`` mid-serve (DESIGN.md §3 "SLO
+        scheduling"): publish its pool-resident KV into the prefix cache so
+        resume is a suffix-only re-prefill, release its blocks AND its
+        outstanding reservation (both observable through
+        ``capacity_version``), and re-queue it at its policy position.
+
+        ``covered`` caps how many leading tokens of ``full_seq`` have KV
+        actually written in the pool (a decode victim's newest token is
+        pending — its KV is unwritten; a mid-chunking victim has only the
+        chunks inserted so far).  ``None`` publishes every full block of
+        ``full_seq``."""
+        req = self.running.pop(slot)
+        self.slots.release(slot)
+        if self.blocks is not None:
+            if self.prefix is not None:
+                seq = req.full_seq
+                if covered is not None:
+                    seq = seq[:covered]
+                self.prefix.publish(seq, self.blocks.owned_by(req.rid),
+                                    self.blocks)
+            self.blocks.release(req.rid)
+        req.slot = None
+        req.preemptions += 1
+        req.prefix_blocks = []
+        self._requeue(req)
+        return req
 
     def retire(self, slot: int, now: float) -> Request:
         req = self.running.pop(slot)
@@ -542,10 +687,17 @@ def summarize(requests: Sequence[Request], wall_s: float,
         return {"mode": mode, "n_requests": 0, "tokens": 0, "wall_s": wall_s,
                 "tok_per_s": 0.0, "p50_latency_s": 0.0, "p99_latency_s": 0.0,
                 "p50_ttft_s": 0.0, "p99_ttft_s": 0.0,
+                "p50_itl_s": 0.0, "p99_itl_s": 0.0, "preemptions": 0,
                 "accepted_per_step": 0.0, "draft_overhead_s": 0.0}
     lats = np.asarray([r.latency_s for r in requests])
     ttfts = np.asarray([r.ttft_s for r in requests])
     aps = np.asarray([r.accepted_per_step for r in requests])
+    # inter-token latency: the pool of ALL consecutive-emission gaps across
+    # requests (an SLO is per token, not per request).  0- and 1-token
+    # requests contribute an EMPTY gap array — never zeros, which would
+    # fraudulently drag p50 down (itl_gaps regression-tests this).
+    gaps = (np.concatenate([r.itl_gaps for r in requests])
+            if requests else np.empty((0,), np.float64))
     tokens = int(sum(len(r.tokens) for r in requests))
     return {
         "mode": mode,
@@ -560,6 +712,9 @@ def summarize(requests: Sequence[Request], wall_s: float,
         "p99_latency_s": _pctile(lats, 99),
         "p50_ttft_s": _pctile(ttfts, 50),
         "p99_ttft_s": _pctile(ttfts, 99),
+        "p50_itl_s": _pctile(gaps, 50),
+        "p99_itl_s": _pctile(gaps, 99),
+        "preemptions": int(sum(r.preemptions for r in requests)),
         # speculative decoding (0.0 whenever spec is off / no rounds ran):
         # mean accepted draft tokens per round, and total wall seconds the
         # engine spent inside draft passes (the overhead amortized by the

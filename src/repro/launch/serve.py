@@ -30,6 +30,19 @@ path whether the engine runs on 1 device or a pod.  On a sharded mesh the
 decode slots are laid out contiguously over the "data" axis and the
 scheduler admits into per-shard free slots.
 
+Under ``--slo`` (DESIGN.md §3 "SLO scheduling") the scheduler orders
+admission by an aged-priority policy (``repro.launch.slo``), reservation
+turns OPTIMISTIC (expected usage instead of worst case), and pool pressure
+is resolved by PREEMPTING the lowest-priority running request — its
+pool-resident KV is published into the prefix cache so resume is a cheap
+suffix-only re-prefill (the COW machinery as a swap layer).
+``--prefill-chunk N`` splits long prompt prefills into N-token chunks
+interleaved with decode steps, reusing the prefix path's ``pos0``/``ctx_kv``
+absolute-position machinery so chunk N attends over the pool-resident KV of
+chunks 0..N-1; intermediate chunks skip the lm-head.  Both keep the decode
+step compiling exactly once and the emitted tokens identical to the FIFO
+baseline.
+
 A batch-synchronous ("static") mode runs the same machinery with admission
 barriered until every slot drains — the baseline ``benchmarks/serve_bench.py``
 measures continuous batching against.
@@ -42,8 +55,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import math
 import time
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -55,6 +69,7 @@ from repro.launch.mesh import make_mesh
 from repro.launch.prefix_cache import PrefixCache
 from repro.launch.scheduler import (BlockAllocator, Request, Scheduler,
                                     poisson_trace, summarize)
+from repro.launch.slo import parse_slo_spec, slo_report
 from repro.models import build_model, kvcache as kvc
 from repro.runtime.executor import Executor
 
@@ -112,7 +127,8 @@ class Server:
                  eos_id: int = -1, bucket: int = PREFILL_BUCKET, mesh=None,
                  executor: Optional[Executor] = None,
                  n_blocks: Optional[int] = None,
-                 speculative: Optional[Tuple[int, int]] = None):
+                 speculative: Optional[Tuple[int, int]] = None,
+                 prefill_chunk: int = 0, slo=None):
         self.cfg = cfg
         self.paged = cfg.resolved_cache_layout == kvc.PAGED
         # Self-speculative decoding (DESIGN.md §"Self-speculative decoding"):
@@ -143,6 +159,38 @@ class Server:
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.bucket = bucket
+        # SLO scheduling + chunked prefill (DESIGN.md §3 "SLO scheduling").
+        # Both lean on the prefix path's pos0/ctx_kv machinery — absolute
+        # positions replayed from a scalar offset — so they carry the same
+        # paged + plain-RoPE requirement the prefix cache does.
+        self.slo = slo
+        self.prefill_chunk = int(prefill_chunk or 0)
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0, got {prefill_chunk}")
+        if self.slo is not None or self.prefill_chunk:
+            what = ("--slo" if self.slo is not None else "--prefill-chunk")
+            if not self.paged:
+                raise ValueError(f"{what} requires the paged cache layout "
+                                 f"(cfg.resolved_cache_layout)")
+            if cfg.rope != "rope":
+                raise ValueError(
+                    f"{what} replays absolute positions from a block-"
+                    f"aligned offset, which needs plain RoPE; got "
+                    f"rope={cfg.rope!r}")
+        if self.prefill_chunk:
+            # chunk boundaries must land on BOTH grids: the block grid (so
+            # ctx_ids covers whole blocks) and the prefill bucket grid (so
+            # the final piece's bucketed extent never outruns the
+            # bucket(full_seq) reservation: pos0 + bucket(L - pos0) ==
+            # bucket(L) only for bucket-aligned pos0)
+            grid = math.lcm(self.block_size, self.bucket)
+            self.prefill_chunk = -(-self.prefill_chunk // grid) * grid
+        # every admission goes through the per-request ctx prefill path
+        # (nctx=0 compiles its own shape, identical graph) whenever any of
+        # the three ctx consumers is on
+        self._ctx_serving = (self.prefix_enabled or self.slo is not None
+                             or self.prefill_chunk > 0)
         if executor is not None:
             if mesh is not None:
                 raise ValueError("pass mesh= OR executor= (the executor "
@@ -172,15 +220,34 @@ class Server:
 
     # -------------------------------------------------------------- plumbing
     def _blocks_needed(self, req: Request) -> int:
-        """Worst-case pool blocks for one request: the bucketed prefill
-        extent or the prompt+decode-budget extent, whichever is longer —
-        the admission gate reserves this so a running request can never
-        starve mid-decode (early EOS returns the unused tail).  Speculative
-        rounds are k positions wide regardless of remaining budget, so the
-        last round can write up to k-1 positions past the final emitted
-        token — the overhang joins the reservation."""
-        need = max(self._bucket_len(len(req.prompt)),
-                   len(req.prompt) + req.max_new + self._spec_overhang)
+        """Pool blocks to reserve at admission, stated over ``full_seq``
+        (prompt plus everything generated — a preempted request's restore
+        re-reserves what the restore actually needs, not the original
+        prompt's worst case).
+
+        FIFO default: the WORST case — the bucketed prefill extent or the
+        sequence+remaining-budget extent, whichever is longer — so a
+        running request can never starve mid-decode (early EOS returns the
+        unused tail).  Speculative rounds are k positions wide regardless
+        of remaining budget, so the last round can write up to k-1
+        positions past the final emitted token — the overhang joins the
+        reservation.
+
+        Under an SLO policy reservation is OPTIMISTIC (DESIGN.md §3 "SLO
+        scheduling"): the full prefill extent plus only ``reserve_frac``
+        of the remaining budget.  The shortfall is paid on demand via
+        ``grow_reserve``, with preemption as the pressure valve — that is
+        the whole point: worst-case gating is what head-of-line-blocks a
+        bursty heavy tail."""
+        L = len(req.full_seq)
+        remaining = max(req.max_new - len(req.tokens), 0)
+        need = max(self._bucket_len(L),
+                   L + remaining + self._spec_overhang)
+        if self.slo is not None:
+            expected = max(self._bucket_len(L),
+                           L + math.ceil(self.slo.reserve_frac * remaining)
+                           + self._spec_overhang)
+            need = min(need, expected)
         return kvc.blocks_for(need, self.block_size)
 
     def _block_pref(self, slot: int) -> Optional[int]:
@@ -205,14 +272,17 @@ class Server:
         return sb
 
     def _prefill_admits(self, cache, admits: Sequence[Tuple[int, Request]],
-                        sched: Optional[Scheduler] = None, bt=None):
+                        sched: Optional[Scheduler] = None, bt=None,
+                        chunking: Optional[Dict[int, int]] = None):
         """Prefill newly admitted requests and insert each into its slot.
 
         A single admission (the continuous steady state) runs a (1, Sb)
         prefill; a burst (static mode / startup) pads the batch dimension to
         ``max_batch`` and prefills all rows at once, so both engines pay one
         compile per prompt bucket for each of the two batch shapes.
-        Returns the first greedy token per admission, aligned with `admits`.
+        Returns the first greedy token per admission, aligned with `admits`
+        — an entry is None when chunked prefill deferred the slot (it is in
+        ``chunking`` state and emits nothing yet).
 
         Paged layout: each admission's prompt blocks are allocated here
         (drawing down the reservation made at admission) and written into
@@ -220,19 +290,19 @@ class Server:
         into exactly those blocks (a burst's shared padding beyond a row's
         own allocation routes to the slot's scratch block).
 
-        Prefix cache on: every admission runs the fused suffix-prefill path
-        individually (hits are per-request — nctx varies — so the padded
-        burst cannot batch them), sharing the hit's blocks read-only into
-        the table and prefilling only the uncached suffix.
+        Ctx serving (prefix cache / SLO / chunked prefill): every admission
+        runs the fused suffix-prefill path individually (hits and restore
+        depths are per-request — nctx varies — so the padded burst cannot
+        batch them), sharing the hit's blocks read-only into the table and
+        prefilling only the uncached suffix of ``full_seq``.
         """
-        if self.prefix_enabled:
-            if len(admits) > 1:
-                firsts = []
-                for adm in admits:
-                    f, cache = self._prefill_admits(cache, [adm], sched, bt)
-                    firsts.extend(f)
-                return firsts, cache
-            return self._prefill_prefix(cache, *admits[0], sched, bt)
+        if self._ctx_serving:
+            firsts = []
+            for slot, req in admits:
+                f, cache = self._begin_fill(cache, slot, req, sched, bt,
+                                            chunking)
+                firsts.append(f)
+            return firsts, cache
         lens = [len(r.prompt) for _, r in admits]
         sb = self._bucket_len(max(lens))
         if self.paged:
@@ -270,6 +340,8 @@ class Server:
                                                 sched, bt)
                 firsts.extend(f)
             return firsts, cache
+        for _, req in admits:            # leaf call: the prefill really runs
+            req.prefilled_tokens += len(req.prompt)
         B = 1 if len(admits) == 1 else self.max_batch
         toks = np.zeros((B, sb), np.int32)
         tl = np.ones((B,), np.int32)
@@ -297,30 +369,74 @@ class Server:
                                            block_rows=rows)
         return [int(first[i]) for i in range(len(admits))], cache
 
-    def _prefill_prefix(self, cache, slot, req, sched, bt):
-        """Fused suffix prefill for one admission under the prefix cache
-        (DESIGN.md §3): the hit's blocks enter the table read-only (shared
-        references held by the scheduler), fresh blocks cover the bucketed
-        suffix, and the executor prefills positions ``[pos0, pos0+Sb)``
-        against the gathered prefix context."""
-        bs = self.block_size
-        nctx = len(req.prefix_blocks)
-        pos0 = nctx * bs
-        suffix = req.prompt[pos0:]
-        sb = self._bucket_len(len(suffix))
-        pref = self._block_pref(slot)
+    def _begin_fill(self, cache, slot, req, sched, bt,
+                    chunking: Optional[Dict[int, int]] = None):
+        """Start filling a slot's KV for one (re-)admission on the ctx
+        path (prefix cache / SLO / chunked prefill): the lookup hit's
+        blocks enter the table read-only (shared references held by the
+        scheduler), then either the whole remaining suffix prefills now
+        (emitting the next token) or — chunked prefill, suffix longer than
+        one chunk — the slot enters ``chunking`` state and the engine
+        advances it one chunk per loop iteration, interleaved with decode.
+
+        The suffix is ``full_seq[pos0:]``.  For a fresh admission that is
+        the uncached prompt tail.  For a preempted request it ends with
+        the PENDING token (the newest emitted token, whose KV the decode
+        step never wrote), so the final piece's last-position logits ARE
+        the next decode output — restore emits exactly the token plain
+        decode would have (DESIGN.md §3 "SLO scheduling")."""
+        pos0 = len(req.prefix_blocks) * self.block_size
         bt[slot, :] = -1
-        if nctx:
-            bt[slot, :nctx] = req.prefix_blocks
-        for j in range(nctx, kvc.blocks_for(pos0 + sb, bs)):
-            bt[slot, j] = sched.blocks.alloc(req.rid, shard=pref)
-        toks = np.zeros((1, sb), np.int32)
-        toks[0, :len(suffix)] = suffix
-        tl = np.asarray([len(suffix)], np.int32)
+        if req.prefix_blocks:
+            bt[slot, :len(req.prefix_blocks)] = req.prefix_blocks
+        if (self.prefill_chunk
+                and len(req.full_seq) - pos0 > self.prefill_chunk):
+            chunking[slot] = pos0
+            return None, cache
+        return self._fill_piece(cache, slot, req, sched, bt, pos0)
+
+    def _fill_piece(self, cache, slot, req, sched, bt, cur: int):
+        """Prefill + insert one contiguous piece of ``full_seq`` starting
+        at the block- and bucket-aligned offset ``cur``, attending over
+        the pool-resident KV of ``[0, cur)`` via ``ctx_ids`` at true
+        absolute positions.  A non-final piece is exactly ``prefill_chunk``
+        tokens with the lm-head skipped (emit=False — nothing to emit);
+        the final piece is the bucketed remainder and returns the next
+        greedy token.  Fresh blocks draw down the admission reservation —
+        and because ``cur`` is bucket-aligned, total coverage is exactly
+        ``bucket(len(full_seq))``, never past it."""
+        seq = req.full_seq
+        bs = self.block_size
+        rem = len(seq) - cur
+        final = not (self.prefill_chunk and rem > self.prefill_chunk)
+        n = self._bucket_len(rem) if final else self.prefill_chunk
+        take = rem if final else n
+        pref = self._block_pref(slot)
+        for j in range(cur // bs, kvc.blocks_for(cur + n, bs)):
+            if bt[slot, j] < 0:
+                bt[slot, j] = sched.blocks.alloc(req.rid, shard=pref)
+        toks = np.zeros((1, n), np.int32)
+        toks[0, :take] = seq[cur:cur + take]
+        tl = np.asarray([take], np.int32)
+        req.prefilled_tokens += int(take)
         first, cache = self.executor.prefill_insert(
             toks, tl, cache, slot, block_row=bt[slot],
-            ctx_ids=bt[slot, :nctx])
-        return [int(first[0])], cache
+            ctx_ids=bt[slot, :cur // bs], emit=final)
+        return (int(first[0]) if final else None), cache
+
+    def _advance_chunk(self, cache, slot, sched, bt,
+                       chunking: Dict[int, int]):
+        """Advance one chunking slot by one piece; returns (first | None,
+        cache) — non-None means the final piece ran and the slot is ready
+        to decode."""
+        req = sched.running[slot]
+        cur = chunking[slot]
+        first, cache = self._fill_piece(cache, slot, req, sched, bt, cur)
+        if first is None:
+            chunking[slot] = cur + self.prefill_chunk
+        else:
+            del chunking[slot]
+        return first, cache
 
     def warmup(self, requests: Sequence[Request], verbose: bool = True) -> int:
         """Compile every shape the trace CAN reach (per prompt bucket: the
@@ -335,8 +451,8 @@ class Server:
         logged, so compile-count regressions are visible in serve output).
         """
         ex = self.executor
-        if self.prefix_enabled:
-            return self._warmup_prefix(requests, verbose)
+        if self._ctx_serving:
+            return self._warmup_ctx(requests, verbose)
         buckets = sorted({self._bucket_len(len(r.prompt)) for r in requests})
         # Burst admission needs >= 2 requests waiting at once; a 1-request
         # trace provably cannot reach those shapes.
@@ -406,42 +522,54 @@ class Server:
                 f"decode step untraced, got {sizes}")
         return 2
 
-    def _warmup_prefix(self, requests: Sequence[Request],
-                       verbose: bool) -> int:
-        """Warmup under the prefix cache: every admission takes the fused
-        suffix-prefill path, so compile, per distinct prompt length, the
-        cold miss (nctx=0 at the full bucket) and the deepest possible hit
-        (the longest block-aligned proper prefix, at the suffix's bucket).
-        Intermediate hit depths — partial overlaps between different
-        prompts — compile lazily mid-serve.  The decode step is shared
-        with the non-prefix engine and still compiles exactly once."""
+    def _warmup_ctx(self, requests: Sequence[Request],
+                    verbose: bool) -> int:
+        """Warmup for ctx serving (prefix cache / SLO / chunked prefill):
+        every admission takes the per-request ctx prefill path, so compile,
+        per distinct prompt length, the COLD admission's piece ladder —
+        each intermediate chunk at ``(prefill_chunk, depth, emit=False)``,
+        then the final bucketed piece — and, when organic prefix hits are
+        possible, the deepest reachable hit (the longest block-aligned
+        proper prefix, at the suffix's bucket).  Intermediate hit depths
+        and preemption-restore shapes (suffix over prompt + GENERATED
+        tokens — runtime state warmup cannot foresee) compile lazily
+        mid-serve.  The decode step is shared with the non-ctx engine and
+        still compiles exactly once."""
         ex = self.executor
         # the deepest REACHABLE hit must mirror PrefixCache's caps: keep
         # >= 1 suffix token AND land pos0 on the prefill-bucket grid
         step = PrefixCache.hit_alignment_step(self.block_size, self.bucket)
-        shapes = set()
+        bs = self.block_size
+        shapes = set()                      # (seq_len, ctx_depth, emit)
         for r in requests:
             L = len(r.prompt)
-            shapes.add((self._bucket_len(L), 0))
-            nmax = ((L - 1) // self.block_size // step) * step
-            if nmax:
-                shapes.add((self._bucket_len(L - nmax * self.block_size),
-                            nmax))
+            cur = 0
+            while self.prefill_chunk and L - cur > self.prefill_chunk:
+                shapes.add((self.prefill_chunk, cur // bs, False))
+                cur += self.prefill_chunk
+            shapes.add((self._bucket_len(L - cur), cur // bs, True))
+            if self.prefix_enabled or self.slo is not None:
+                nmax = ((L - 1) // bs // step) * step
+                rem = L - nmax * bs
+                if nmax and not (self.prefill_chunk
+                                 and rem > self.prefill_chunk):
+                    shapes.add((self._bucket_len(rem), nmax, True))
         cache = ex.init_cache()
         n_shapes = 0
-        for sb, nctx in sorted(shapes):
+        for sb, nctx, em in sorted(shapes):
             toks1 = np.zeros((1, sb), np.int32)
             tl1 = np.ones((1,), np.int32)
             brow = np.full((ex.n_bt,), -1, np.int32)
             _, cache = jax.block_until_ready(
                 ex.prefill_insert(toks1, tl1, cache, 0, block_row=brow,
-                                  ctx_ids=np.zeros((nctx,), np.int32)))
+                                  ctx_ids=np.zeros((nctx,), np.int32),
+                                  emit=em))
             n_shapes += 1
         n_shapes += self._warm_decode(cache)
         if verbose:
             print(f"[warmup] compiled {n_shapes} shapes "
-                  f"({len(shapes)} (bucket, prefix-depth) pair(s), layout "
-                  f"paged + prefix cache)")
+                  f"({len(shapes)} (len, ctx-depth, emit) triple(s), "
+                  f"layout paged + ctx serving)")
         return n_shapes
 
     def _spec_round(self, sched, cache, tok, pos, act, bt, now_fn):
@@ -472,8 +600,10 @@ class Server:
         draft_dt = time.perf_counter() - t_draft
         verdicts = np.asarray(verdicts)
         now = now_fn()
-        share = draft_dt / max(len(sched.running), 1)
+        share = draft_dt / max(int(act.sum()), 1)
         for slot in list(sched.running):
+            if not act[slot]:
+                continue        # chunking slot: masked out of the round
             req = sched.running[slot]
             req.draft_s += share
             d, v = drafts[slot], verdicts[slot]
@@ -488,7 +618,7 @@ class Server:
             finished = False
             n_emit = 0
             for t in emit:
-                req.tokens.append(t)
+                req.emit(t, now)
                 n_emit += 1
                 if t == self.eos_id or len(req.tokens) >= req.max_new:
                     finished = True
@@ -514,13 +644,25 @@ class Server:
         """
         clock = time.perf_counter
         ex = self.executor
+
+        def worst_extent(r: Request) -> int:
+            # Under an SLO policy a preempted request can restore prompt +
+            # generated in one bucketed re-prefill, so the worst cache
+            # extent is the BUCKETED full sequence, not max(bucketed
+            # prompt, exact sequence).  This is also what guarantees the
+            # preemption pressure path terminates: every request is
+            # individually feasible, so preempting down to one runner
+            # always makes progress.
+            if self.slo is not None:
+                return self._bucket_len(len(r.prompt) + r.max_new
+                                        + self._spec_overhang)
+            return max(self._bucket_len(len(r.prompt)),
+                       len(r.prompt) + r.max_new + self._spec_overhang)
+
         if not (self._swa_window or self.cfg.is_attention_free):
             # fail fast, before any request is served/mutated, rather than
             # aborting mid-run at admission time
-            bad = [r.rid for r in requests
-                   if max(self._bucket_len(len(r.prompt)),
-                          len(r.prompt) + r.max_new + self._spec_overhang)
-                   > self.max_seq]
+            bad = [r.rid for r in requests if worst_extent(r) > self.max_seq]
             if bad:
                 raise ValueError(
                     f"requests {bad} need more cache than max_seq="
@@ -533,7 +675,8 @@ class Server:
             # exceeds the whole pool could never reserve, and admission
             # would head-of-line-block forever
             bad = [r.rid for r in requests
-                   if self._blocks_needed(r) > ex.n_blocks]
+                   if kvc.blocks_for(worst_extent(r), self.block_size)
+                   > ex.n_blocks]
             if bad:
                 raise ValueError(
                     f"requests {bad} need more blocks than the pool holds "
@@ -547,10 +690,13 @@ class Server:
         if self.paged:
             blocks = BlockAllocator(ex.n_blocks, n_shards=ex.n_block_shards,
                                     shard_of=ex.block_shards)
-            if self.prefix_enabled:
+            if self.prefix_enabled or self.slo is not None:
                 # align hits to the prefill-bucket grid: the reservation /
                 # fail-fast / table-width math bounds suffix coverage by
-                # bucket(len(prompt)) only for bucket-aligned pos0
+                # bucket(len(prompt)) only for bucket-aligned pos0.  SLO
+                # mode needs the cache even with --prefix-cache off — it is
+                # the swap layer preemption publishes into and restore
+                # re-attaches from.
                 prefix = PrefixCache(self.block_size,
                                      align_tokens=self.bucket)
         sched = Scheduler(requests, self.max_batch,
@@ -558,16 +704,78 @@ class Server:
                           blocks=blocks,
                           blocks_needed=(self._blocks_needed if blocks
                                          is not None else None),
-                          prefix=prefix)
+                          prefix=prefix, policy=self.slo)
         cache = ex.init_cache()
         B = self.max_batch
         tok = np.zeros((B, 1), np.int32)
         pos = np.zeros((B, 1), np.int32)
         act = np.zeros((B,), bool)
         bt = (np.full((B, ex.n_bt), -1, np.int32) if self.paged else None)
+        chunking: Dict[int, int] = {}      # slot -> next piece offset
         steps = 0
+        n_chunks = 0
         peak_running = 0
         t0 = clock()
+
+        def emit_first(slot: int, req: Request, first: int,
+                       now: float) -> None:
+            """Book a prefill's emitted token and arm the slot for decode
+            (shared by fresh admission, final chunk, and restore — the
+            feed position is uniformly the index of the newest token in
+            ``full_seq``, whose KV the NEXT step writes)."""
+            req.emit(first, now)
+            if first == self.eos_id or len(req.tokens) >= req.max_new:
+                sched.retire(slot, now)
+                if self.paged:
+                    bt[slot, :] = -1
+                return
+            tok[slot, 0] = first
+            pos[slot, 0] = len(req.prompt) + len(req.tokens) - 1
+            act[slot] = True
+
+        def preempt_slot(vslot: int, vnow: float) -> None:
+            """Evict a victim: publish only the KV actually written (a
+            decode victim's pending token never was — ``pos`` is the feed
+            position; a chunking victim has exactly ``[0, cur)``), clear
+            the slot state, and re-queue it at its policy position."""
+            covered = chunking.pop(vslot, None)
+            if covered is None:
+                covered = int(pos[vslot, 0])
+            sched.preempt(vslot, vnow, covered=covered)
+            act[vslot] = False
+            bt[vslot, :] = -1
+            tok[vslot, 0] = 0
+            pos[vslot, 0] = 0
+
+        def secure_one(req: Request) -> bool:
+            """Make one more block allocatable for ``req`` — the
+            optimistic-reservation pressure path (DESIGN.md §3 "SLO
+            scheduling"): spend remaining reservation if any; otherwise
+            free capacity (LRU prefix eviction first — preempted victims'
+            published blocks land there — then preempt the policy's
+            preferred victim) and grow the reservation.  Returns False
+            when ``req`` itself had to yield (no other victims left); the
+            caller must skip the alloc.  Terminates: each round either
+            evicts or preempts, at most max_batch preemptions are
+            possible, and the per-request feasibility fail-fast means a
+            lone runner always fits."""
+            if sched.blocks.reserved_of(req.rid) > 0:
+                return True
+            while not sched.blocks.can_reserve(1):
+                if prefix is not None:
+                    prefix.evict_until(sched.blocks, 1)
+                    if sched.blocks.can_reserve(1):
+                        break
+                victims = [s for s in sched.running if s != req.slot]
+                if not victims:
+                    preempt_slot(req.slot, clock() - t0)
+                    return False
+                v = max(victims,
+                        key=lambda s: self.slo.victim_key(sched.running[s]))
+                preempt_slot(v, clock() - t0)
+            sched.blocks.grow_reserve(req.rid, 1)
+            return True
+
         while not sched.done:
             now = clock() - t0
             sched.poll(now)
@@ -575,20 +783,24 @@ class Server:
                 admits = sched.admit(now)
                 if admits:
                     firsts, cache = self._prefill_admits(cache, admits,
-                                                         sched, bt)
+                                                         sched, bt, chunking)
                     now = clock() - t0
                     peak_running = max(peak_running, len(sched.running))
                     for (slot, req), first in zip(admits, firsts):
-                        req.first_token_s = now
-                        req.tokens.append(first)
-                        if first == self.eos_id or req.max_new <= 1:
-                            sched.retire(slot, now)
-                            if self.paged:
-                                bt[slot, :] = -1
-                            continue
-                        tok[slot, 0] = first
-                        pos[slot, 0] = len(req.prompt)
-                        act[slot] = True
+                        if first is None:
+                            continue     # chunking: nothing emitted yet
+                        emit_first(slot, req, first, now)
+            if chunking:
+                # one piece per loop iteration (lowest slot first, for
+                # determinism): a long prefill interleaves with decode
+                # steps instead of stalling every running request
+                slot = min(chunking)
+                first, cache = self._advance_chunk(cache, slot, sched, bt,
+                                                   chunking)
+                n_chunks += 1
+                if first is not None:
+                    emit_first(slot, sched.running[slot], first,
+                               clock() - t0)
             if not sched.running:
                 if sched.waiting:
                     continue   # slots free (instant retirements): re-admit
@@ -599,19 +811,30 @@ class Server:
                 if wait > 0:
                     time.sleep(min(wait, 0.005))
                 continue
+            if not act.any():
+                continue       # every running slot is still mid-chunking
             if self.paged:
                 # alloc-on-demand: every block this step's writes can touch
-                # must exist before the step runs (reserved at admission, so
-                # the allocs cannot fail).  A plain step writes one
-                # position; a speculative round writes k consecutive ones.
+                # must exist before the step runs.  FIFO mode reserved the
+                # worst case at admission so the alloc cannot fail; the SLO
+                # policy's optimistic reservation secures the shortfall
+                # here (eviction, then preemption).  A plain step writes
+                # one position; a speculative round writes k consecutive.
                 span = max(self.spec_k, 1)
-                for slot, req in sched.running.items():
+                for slot, req in list(sched.running.items()):
+                    if not act[slot]:
+                        continue        # chunking, or preempted just now
                     p0 = int(pos[slot, 0])
                     for li in range(p0 // self.block_size,
                                     (p0 + span - 1) // self.block_size + 1):
                         if bt[slot, li] < 0:
+                            if (self.slo is not None
+                                    and not secure_one(req)):
+                                break   # req itself yielded its slot
                             bt[slot, li] = sched.blocks.alloc(
                                 req.rid, shard=self._block_pref(slot))
+                if not act.any():
+                    continue   # pressure path preempted every decoder
             if self.spec:
                 cache = self._spec_round(sched, cache, tok, pos, act, bt,
                                          lambda: clock() - t0)
@@ -622,9 +845,11 @@ class Server:
             steps += 1
             now = clock() - t0
             for slot in list(sched.running):
+                if not act[slot]:
+                    continue            # chunking slot: masked this step
                 req = sched.running[slot]
                 t = int(new_tok[slot])
-                req.tokens.append(t)
+                req.emit(t, now)
                 pos[slot, 0] += 1
                 if t == self.eos_id or len(req.tokens) >= req.max_new:
                     act[slot] = False
@@ -654,15 +879,25 @@ class Server:
                                   if rounds else 0.0),
                 "spec_compiles": ex.spec_cache_sizes(),
             }
-        # prefill accounting (prefix cache or not): tokens the engine
-        # actually forwarded vs tokens served out of shared blocks
+        # prefill accounting: the per-request counter, not len(prompt) -
+        # hits — chunked pieces, preemption restores, and cumulative
+        # re-admission hits all move the real forwarded count away from
+        # that difference (which can even go negative once hit accounting
+        # is cumulative across re-admissions)
         n_done = max(len(sched.finished), 1)
-        prefilled = int(sum(len(r.prompt) - r.prefix_hit_tokens
-                            for r in sched.finished))
+        prefilled = int(sum(r.prefilled_tokens for r in sched.finished))
         stats["prefilled_tokens"] = prefilled
         stats["prefilled_tokens_mean"] = round(prefilled / n_done, 2)
         stats["prefix_tokens_reused"] = int(sum(r.prefix_hit_tokens
                                                 for r in sched.finished))
+        if self.prefill_chunk:
+            stats["prefill_chunks"] = n_chunks
+        if self.slo is not None:
+            stats["slo"] = {
+                "aging_s": self.slo.aging_s,
+                "reserve_frac": self.slo.reserve_frac,
+                "classes": slo_report(sched.finished, self.slo),
+            }
         if self.paged:
             stats["block_size"] = self.block_size
             stats["n_blocks"] = ex.n_blocks
@@ -741,25 +976,48 @@ def build_server(args) -> Tuple[Server, object]:
     # layouts' attention shapes — and therefore their greedy tokens —
     # bit-identical for the serve_bench cross-layout assertion.
     max_seq = prompt_pad + args.max_new + 8 + (spec[1] - 1 if spec else 0)
+    chunk = int(getattr(args, "prefill_chunk", 0) or 0)
+    slo = parse_slo_spec(getattr(args, "slo", "off") or "off")
+    if slo is not None or chunk:
+        # restore headroom: a preempted request re-prefills prompt +
+        # generated in one bucketed piece, whose padded extent can exceed
+        # the prompt-only pad by up to one bucket
+        max_seq += PREFILL_BUCKET
     bsz = cfg.cache_block_size
     max_seq = -(-max_seq // bsz) * bsz
     server = Server(cfg, params, max_batch=args.max_batch, max_seq=max_seq,
                     eos_id=args.eos_id, mesh=mesh,
                     n_blocks=getattr(args, "cache_blocks", None),
-                    speculative=spec)
+                    speculative=spec, prefill_chunk=chunk, slo=slo)
     return server, cfg
 
 
 def trace_from_args(args, cfg):
     """One arrival trace from the shared CLI flags (used by both the serve
-    CLI and benchmarks/serve_bench so the two can never drift)."""
+    CLI and benchmarks/serve_bench so the two can never drift).
+    ``--trace-seed`` decouples the arrival RNG from ``--seed`` (which also
+    fixes the weights) so traffic can vary against a fixed checkpoint;
+    ``--priority-mix`` draws each request's SLO class from the --slo
+    policy's classes with the given weights."""
+    seed = getattr(args, "trace_seed", None)
+    if seed is None:
+        seed = args.seed
+    mix = None
+    pm = getattr(args, "priority_mix", None)
+    if pm:
+        slo = parse_slo_spec(getattr(args, "slo", "off") or "off")
+        if slo is None:
+            raise ValueError("--priority-mix draws classes from the --slo "
+                             "policy; pass --slo as well")
+        mix = slo.mix([float(x) for x in pm.split(",")])
     return poisson_trace(args.requests, rate_rps=args.arrival_rate,
                          prompt_len=args.prompt_len,
                          max_new=args.max_new, min_new=args.min_new,
                          prompt_jitter=args.prompt_jitter,
                          shared_prefix_len=getattr(args, "shared_prefix_len",
                                                    0),
-                         vocab_size=cfg.vocab_size, seed=args.seed)
+                         vocab_size=cfg.vocab_size, seed=int(seed),
+                         priority_mix=mix)
 
 
 def _positive_rate(s: str) -> float:
@@ -843,6 +1101,29 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
                          "trained checkpoint; 0 = off).  Random weights' "
                          "logit margins drown in low-bit noise, so "
                          "speculative acceptance studies need this.")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split prompt prefills into pieces of this many "
+                         "tokens, interleaved with decode steps so a long "
+                         "admission stops stalling running requests (0 = "
+                         "off; rounded UP to lcm(block-size, prefill "
+                         "bucket)).  Requires the paged layout + plain "
+                         "RoPE; tokens stay identical to unchunked serving.")
+    ap.add_argument("--slo", default="off",
+                    help='SLO scheduling (DESIGN.md §3 "SLO scheduling"): '
+                         '"off", "default" (interactive/standard/batch), '
+                         'or "name:prio:ttft:itl,..." custom classes; '
+                         'append "@aging=S" / "@reserve=F" knobs.  Turns '
+                         'on aged-priority admission, optimistic block '
+                         'reservation, and preemption with prefix-cache-'
+                         'backed restore.  Requires the paged layout + '
+                         'plain RoPE.')
+    ap.add_argument("--trace-seed", type=int, default=None,
+                    help="RNG seed for the arrival trace only (default: "
+                         "--seed), so traffic varies against fixed weights")
+    ap.add_argument("--priority-mix", default=None, metavar="W1,W2,...",
+                    help="per-class arrival weights, one per --slo class "
+                         "in declaration order; each request draws its "
+                         "class i.i.d. from the normalized mix")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="-1 disables EOS retirement")
     ap.add_argument("--seed", type=int, default=0)
@@ -880,6 +1161,10 @@ def main():
             cache_info += (f" | spec psi{sp['draft_bits']} k={sp['k']}: "
                            f"{stats['accepted_per_step']:.2f} accepted/"
                            f"round, draft {stats['draft_overhead_s']:.3f}s")
+        if stats.get("preemptions") or "slo" in stats:
+            cache_info += (f" | preemptions {stats['preemptions']}, "
+                           f"restores "
+                           f"{stats.get('prefix_cache', {}).get('restores', 0)}")
         print(f"[{mode}] served {stats['n_requests']} requests: "
               f"{stats['tokens']} tokens in {stats['wall_s']:.3f}s = "
               f"{stats['tok_per_s']:.1f} tok/s | "
@@ -888,6 +1173,15 @@ def main():
               f"ttft p50 {stats['p50_ttft_s'] * 1e3:.0f}ms | "
               f"decode compiles {stats['decode_compiles']} | "
               f"slot shards {stats['slot_shards']} | {cache_info}")
+        if "slo" in stats:
+            for name, c in stats["slo"]["classes"].items():
+                print(f"  [{name}] n={c['n_requests']} "
+                      f"ttft p99 {c['p99_ttft_s'] * 1e3:.0f}ms "
+                      f"(attain {c['ttft_attainment']:.2f} of "
+                      f"{c['ttft_deadline_s'] * 1e3:.0f}ms) | "
+                      f"itl p99 {c['p99_itl_s'] * 1e3:.0f}ms "
+                      f"(attain {c['itl_attainment']:.2f}) | "
+                      f"preemptions {c['preemptions']}")
         for r in done[:2]:
             print(f"  req {r.rid}: slot {r.slot}, {len(r.tokens)} tokens, "
                   f"{r.out[:10].tolist()}...")

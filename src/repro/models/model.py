@@ -96,11 +96,17 @@ class Model:
 
     # ----------------------------------------------------------- full forward
     def forward(self, params, batch, collect_cache=False, pos0=0,
-                ctx_kv=None):
+                ctx_kv=None, emit_logits=True):
         """``pos0``/``ctx_kv`` (prefix-cache suffix prefill, DESIGN.md §3):
         positions start at ``pos0`` (RoPE and the causal mask are driven by
         absolute positions) and attention additionally sees the shared
-        prefix KV in ``ctx_kv`` covering ``[0, pos0)``."""
+        prefix KV in ``ctx_kv`` covering ``[0, pos0)``.
+
+        ``emit_logits=False`` (chunked prefill's intermediate chunks,
+        DESIGN.md §3 "SLO scheduling") skips the lm-head entirely and
+        returns ``None`` logits — only the KV states matter, and the
+        (S, d_model) x (d_model, V) projection is the dominant FLOP of a
+        chunk that emits nothing."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
@@ -111,7 +117,7 @@ class Model:
             params["stack"], x, cfg, positions, enc_kv=enc_out,
             collect_cache=collect_cache, ctx_kv=ctx_kv)
         x = layers.apply_norm(params["norm_f"], x, cfg)
-        logits = self._logits(params, x)
+        logits = self._logits(params, x) if emit_logits else None
         return logits, states, aux, enc_out
 
     def loss(self, params, batch):
@@ -182,7 +188,7 @@ class Model:
         return cache
 
     def prefill(self, params, batch, cache_len=None, true_lens=None,
-                pos0=0, ctx_kv=None):
+                pos0=0, ctx_kv=None, emit_logits=True):
         """Forward the prompt, return (last-token logits, decode cache).
 
         The returned :class:`KVCache` is always DENSE layout — a
@@ -211,13 +217,16 @@ class Model:
         cache_len = cache_len or S
         logits, states, _, enc_out = self.forward(params, batch,
                                                   collect_cache=True,
-                                                  pos0=pos0, ctx_kv=ctx_kv)
+                                                  pos0=pos0, ctx_kv=ctx_kv,
+                                                  emit_logits=emit_logits)
         kv = _states_to_cache(cfg, states, S, cache_len)
         enc = enc_out if cfg.family == "encdec" else None
         if true_lens is None:
-            return logits[:, -1], KVCache(kv, enc)
-        B = logits.shape[0]
-        last = logits[jnp.arange(B), true_lens - 1]
+            return (logits[:, -1] if emit_logits else None), KVCache(kv, enc)
+        last = None
+        if emit_logits:
+            B = logits.shape[0]
+            last = logits[jnp.arange(B), true_lens - 1]
         # k_pos entries are ABSOLUTE positions, so the pad threshold is
         # pos0 + suffix true length
         return last, KVCache(_mask_padded_kv(kv, true_lens + pos0), enc)

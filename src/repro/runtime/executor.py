@@ -205,7 +205,8 @@ class Executor:
             # compiled executable; the decode step is untouched.
             self._prefill_insert_prefix = jax.jit(
                 self._prefill_insert_fn_paged_prefix, donate_argnums=(3,),
-                out_shardings=(tok_sh, self.cache_shardings))
+                static_argnums=(7,),       # emit: chunked prefill skips the
+                out_shardings=(tok_sh, self.cache_shardings))  # lm-head
             self._insert_burst = jax.jit(
                 self._insert_burst_fn_paged, donate_argnums=(0,),
                 out_shardings=self.cache_shardings)
@@ -260,8 +261,16 @@ class Executor:
         """Elastic restart path: rebuild this Executor on the surviving
         device set; params reshard via device_put (resharding IS the load
         path, DESIGN.md §6).  Returns self when the plan already matches
-        the current mesh (single-device no-op included)."""
-        devices = list(devices if devices is not None else jax.devices())
+        the current mesh (single-device no-op included).
+
+        devices=None means THIS executor's devices minus any that died —
+        not every visible device: an executor deliberately built on a
+        submesh must not silently regrab the whole host on restart."""
+        if devices is None:
+            alive = set(jax.devices())
+            devices = [d for d in self.mesh.devices.reshape(-1)
+                       if d in alive]
+        devices = list(devices)
         mp = (model_parallel if model_parallel is not None
               else self.mesh.shape.get("model", 1))
         plan = plan_remesh(len(devices), mp,
@@ -296,7 +305,8 @@ class Executor:
         return self.monitor.observe(step_times)
 
     # ------------------------------------------------------------ jitted fns
-    def _prefill_fn(self, params, tokens, true_lens, pos0=0, ctx_kv=None):
+    def _prefill_fn(self, params, tokens, true_lens, pos0=0, ctx_kv=None,
+                    emit=True):
         """(B, Sb) right-padded prompts -> (first greedy token (B,), cache).
 
         The per-sequence cache is always dense layout; paged executors
@@ -304,7 +314,11 @@ class Executor:
         pool blocks), dense executors at ``max_seq`` (the slot extent).
         ``pos0``/``ctx_kv`` select the prefix-cache suffix prefill
         (DESIGN.md §3): tokens are the uncached suffix, positions start at
-        ``pos0``, attention reads the shared prefix from ``ctx_kv``."""
+        ``pos0``, attention reads the shared prefix from ``ctx_kv``.
+        ``emit=False`` (a chunked prefill's intermediate chunk) skips the
+        lm-head and returns zero tokens — only the KV matters, and the
+        output stays (B,) int32 so the jitted out_shardings contract is
+        unchanged."""
         B, S = tokens.shape
         batch = {"tokens": tokens}
         if self.cfg.rope == "mrope":
@@ -315,7 +329,9 @@ class Executor:
                 (B, self.cfg.enc_frames, self.cfg.d_model), self.dtype)
         logits, cache = self.model.prefill(
             params, batch, cache_len=(None if self.paged else self.max_seq),
-            true_lens=true_lens, pos0=pos0, ctx_kv=ctx_kv)
+            true_lens=true_lens, pos0=pos0, ctx_kv=ctx_kv, emit_logits=emit)
+        if not emit:
+            return jnp.zeros((B,), jnp.int32), cache
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
 
     def _decode_fn(self, params, token, pos, active, cache):
@@ -394,20 +410,26 @@ class Executor:
                                               block_row=block_row)
 
     def _prefill_insert_fn_paged_prefix(self, params, tokens, true_lens,
-                                        cache, slot, block_row, ctx_ids):
+                                        cache, slot, block_row, ctx_ids,
+                                        emit=True):
         """Prefix-cache suffix prefill (DESIGN.md §3): ``ctx_ids`` (nctx,)
         names the shared-prefix pool blocks (absolute positions
         ``[0, nctx*bs)``), ``tokens`` holds only the uncached suffix, and
         ``block_row`` is the slot's FULL table row — the suffix rows
         scatter into its entries from logical block ``nctx`` on.  Reading
         the context out of ``cache`` before the insert writes it is safe
-        under donation (one jitted program)."""
+        under donation (one jitted program).  ``emit`` is static (jit
+        static_argnums): an intermediate chunk of a chunked prefill passes
+        False and skips the lm-head — the same entry point also serves
+        chunk insertion, with ``ctx_ids`` naming the blocks of chunks
+        0..N-1 (DESIGN.md §3 "SLO scheduling")."""
         nctx = ctx_ids.shape[0]                     # static, from the shape
         pos0 = nctx * self.block_size
         ctx_kv = (self.model.gather_prefix_ctx(cache, ctx_ids, self.dtype)
                   if nctx else None)
         first, seq_cache = self._prefill_fn(params, tokens, true_lens,
-                                            pos0=pos0, ctx_kv=ctx_kv)
+                                            pos0=pos0, ctx_kv=ctx_kv,
+                                            emit=emit)
         return first, self.model.insert_cache(cache, seq_cache, slot,
                                               block_row=block_row[nctx:])
 
@@ -457,17 +479,22 @@ class Executor:
                              jnp.asarray(true_lens))
 
     def prefill_insert(self, tokens, true_lens, cache, slot: int,
-                       block_row=None, ctx_ids=None):
-        """Fused prefill + slot insert.  ``ctx_ids`` (prefix-cache mode,
-        paged only) routes to the suffix-prefill twin: pass the hit's
-        physical block ids — possibly empty, which compiles its own
-        nctx=0 shape but computes the identical graph — and ``tokens``
-        holding only the uncached suffix."""
+                       block_row=None, ctx_ids=None, emit=True):
+        """Fused prefill + slot insert.  ``ctx_ids`` (prefix-cache /
+        chunked-prefill mode, paged only) routes to the suffix-prefill
+        twin: pass the context block ids — possibly empty, which compiles
+        its own nctx=0 shape but computes the identical graph — and
+        ``tokens`` holding only the uncached suffix / current chunk.
+        ``emit=False`` (intermediate chunks; ctx path only) skips the
+        lm-head and returns zero tokens."""
         if self.paged and ctx_ids is not None:
             return self._prefill_insert_prefix(
                 self.params, jnp.asarray(tokens), jnp.asarray(true_lens),
                 cache, jnp.int32(slot), jnp.asarray(block_row),
-                jnp.asarray(ctx_ids, jnp.int32))
+                jnp.asarray(ctx_ids, jnp.int32), emit)
+        if not emit:
+            raise ValueError("emit=False needs the ctx (prefix/chunk) "
+                             "prefill path — pass ctx_ids")
         if self.paged:
             return self._prefill_insert(self.params, jnp.asarray(tokens),
                                         jnp.asarray(true_lens), cache,

@@ -1,0 +1,535 @@
+"""SLO-scheduling subsystem tests (DESIGN.md §3 "SLO scheduling"): policy
+ordering/aging/victim selection, --slo spec parsing, optimistic-reservation
+growth, preemption accounting across admit -> preempt -> re-admit -> retire
+(property-tested churn), the capacity_version/_hol_blocked audit for
+non-retire frees, ITL metric regressions, and the end-to-end acceptance:
+chunked + priority + preemptive serving is token-identical to the FIFO
+baseline with preemptions observed and the decode step compiling once."""
+import dataclasses
+import random
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.launch.prefix_cache import PrefixCache
+from repro.launch.scheduler import (BlockAllocator, Request, Scheduler,
+                                    poisson_trace, summarize)
+from repro.launch.serve import Server, parse_mesh_spec
+from repro.launch.slo import (DEFAULT_CLASSES, SLOClass, SLOPolicy,
+                              bursty_heavy_tail_trace, parse_slo_spec,
+                              slo_report)
+from repro.models import build_model
+
+
+def _req(rid, arrival=0.0, prio=0, plen=4, max_new=4, name=""):
+    return Request(rid=rid, prompt=np.arange(plen, dtype=np.int32),
+                   max_new=max_new, arrival_s=arrival, priority=prio,
+                   slo_class=name)
+
+
+# ---------------------------------------------------------------------------
+# Policy: ordering, aging, victims, parsing.
+# ---------------------------------------------------------------------------
+class TestPolicy:
+    def test_priority_orders_admission(self):
+        pol = SLOPolicy(aging_s=30.0)
+        hi = _req(0, arrival=1.0, prio=0)
+        lo = _req(1, arrival=0.0, prio=2)
+        assert pol.sort_key(hi) < pol.sort_key(lo)
+
+    def test_aging_prevents_starvation(self):
+        """A batch request that has waited aging_s * (priority gap) longer
+        outranks a fresh interactive one — the key is time-invariant, so
+        this is decided purely by arrival times."""
+        pol = SLOPolicy(aging_s=10.0)
+        old_batch = _req(0, arrival=0.0, prio=2)
+        # interactive arriving 20s+ later: gap * aging = 2 * 10
+        young_hi = _req(1, arrival=21.0, prio=0)
+        assert pol.sort_key(old_batch) < pol.sort_key(young_hi)
+        barely = _req(2, arrival=19.0, prio=0)
+        assert pol.sort_key(barely) < pol.sort_key(old_batch)
+
+    def test_sort_key_time_invariant_ties_break_fifo(self):
+        pol = SLOPolicy()
+        a, b = _req(0, arrival=1.0), _req(1, arrival=1.0)
+        assert pol.sort_key(a) < pol.sort_key(b)        # rid breaks the tie
+
+    def test_victim_key_prefers_lowest_priority_youngest(self):
+        pol = SLOPolicy()
+        batch_young = _req(0, arrival=5.0, prio=2)
+        batch_old = _req(1, arrival=0.0, prio=2)
+        inter = _req(2, arrival=0.0, prio=0)
+        victims = sorted([inter, batch_old, batch_young],
+                         key=pol.victim_key)
+        assert victims[-1] is batch_young               # LARGER = preferred
+
+    def test_class_of_by_name_then_priority(self):
+        pol = SLOPolicy()
+        assert pol.class_of(_req(0, name="batch")).name == "batch"
+        assert pol.class_of(_req(1, prio=1)).name == "standard"
+        assert pol.class_of(_req(2, prio=9)) is None
+
+    def test_mix_shape(self):
+        pol = SLOPolicy()
+        mix = pol.mix([1.0, 2.0, 3.0])
+        assert [m[0] for m in mix] == ["interactive", "standard", "batch"]
+        with pytest.raises(ValueError, match="weights"):
+            pol.mix([1.0])
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError, match="at least one class"):
+            SLOPolicy(())
+        with pytest.raises(ValueError, match="duplicate"):
+            SLOPolicy((DEFAULT_CLASSES[0], DEFAULT_CLASSES[0]))
+        with pytest.raises(ValueError, match="aging_s"):
+            SLOPolicy(aging_s=0.0)
+        with pytest.raises(ValueError, match="reserve_frac"):
+            SLOPolicy(reserve_frac=1.5)
+        with pytest.raises(ValueError, match="deadlines"):
+            SLOClass("x", 0, ttft_deadline_s=0.0, itl_deadline_s=1.0)
+
+    def test_parse_slo_spec(self):
+        assert parse_slo_spec("off") is None
+        assert parse_slo_spec("") is None
+        assert parse_slo_spec("none") is None
+        pol = parse_slo_spec("default")
+        assert tuple(c.name for c in pol.classes) == ("interactive",
+                                                      "standard", "batch")
+        pol = parse_slo_spec("rt:0:0.2:0.05,bulk:3:60:10@aging=7@reserve=0.5")
+        assert pol.aging_s == 7.0 and pol.reserve_frac == 0.5
+        assert pol.classes[1].priority == 3
+        with pytest.raises(ValueError, match="knob"):
+            parse_slo_spec("default@bogus=1")
+        with pytest.raises(ValueError, match="class"):
+            parse_slo_spec("name:only:three")
+
+
+# ---------------------------------------------------------------------------
+# Allocator: reservation growth + capacity_version audit.
+# ---------------------------------------------------------------------------
+class TestReservationGrowth:
+    def test_grow_reserve(self):
+        alloc = BlockAllocator(4)
+        alloc.reserve(1, 1)
+        alloc.alloc(1)
+        assert alloc.reserved_of(1) == 0
+        alloc.grow_reserve(1, 2)
+        assert alloc.reserved_of(1) == 2
+        with pytest.raises(ValueError, match="n > 0"):
+            alloc.grow_reserve(1, 0)
+        with pytest.raises(ValueError, match="no reservation"):
+            alloc.grow_reserve(2, 1)
+        with pytest.raises(ValueError, match="cannot grow"):
+            alloc.grow_reserve(1, 4)
+
+    def test_unref_free_bumps_capacity_version(self):
+        """Regression (the _hol_blocked audit): a block freed by the
+        prefix cache dropping its pin — NOT a request retiring — must
+        still be observable through capacity_version, or a head-of-line
+        blocked admission would never retry."""
+        alloc = BlockAllocator(4)
+        alloc.reserve(1, 1)
+        blk = alloc.alloc(1)
+        alloc.ref_block(blk)
+        alloc.release(1)               # pin keeps the block alive
+        v = alloc.capacity_version
+        assert alloc.unref_block(blk)  # last ref -> freed
+        assert alloc.capacity_version > v
+
+    def test_reservation_refund_bumps_capacity_version(self):
+        alloc = BlockAllocator(4)
+        alloc.reserve(1, 3)
+        v = alloc.capacity_version
+        alloc.release(1)               # no blocks held, pure refund
+        assert alloc.capacity_version > v
+
+    def test_hol_blocked_admission_retries_after_preempt(self):
+        """End-to-end memo audit: an admission blocked on blocks proceeds
+        once preemption frees capacity (preempt releases blocks AND the
+        reservation remainder, both bumping capacity_version)."""
+        pol = SLOPolicy(aging_s=1000.0)
+        runner = _req(0, arrival=0.0, prio=2, plen=4, max_new=4)
+        urgent = _req(1, arrival=1.0, prio=0, plen=4, max_new=4)
+        blocks = BlockAllocator(4)
+        sched = Scheduler([runner, urgent], max_batch=2, blocks=blocks,
+                          blocks_needed=lambda r: 3, policy=pol)
+        sched.poll(0.0)
+        assert [r for _, r in sched.admit(0.0)] == [runner]
+        sched.poll(1.0)
+        assert sched.admit(1.0) == []            # 3 > 4 - 3 reserved/held
+        assert sched._hol_blocked is not None
+        assert sched.admit(1.1) == []            # memo: no pointless retry
+        sched.preempt(runner.slot, 2.0)
+        admits = sched.admit(2.0)
+        assert [r.rid for _, r in admits] == [1]  # urgent first (priority)
+        assert runner in sched.waiting
+
+    def test_every_free_path_bumps_capacity_version(self):
+        """Audit that all block-freeing paths route through _decref:
+        release, unref_block, and a fork's decref of the shared original
+        all advance capacity_version when a block actually frees."""
+        alloc = BlockAllocator(6)
+        alloc.reserve(1, 2)
+        b0 = alloc.alloc(1)
+        v = alloc.capacity_version
+        alloc.release(1)                         # frees b0 + refund
+        assert alloc.capacity_version >= v + 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: preemption accounting.
+# ---------------------------------------------------------------------------
+class TestPreemptionAccounting:
+    def _sched(self, reqs, n_blocks=16, max_batch=2, policy=None,
+               prefix=None):
+        blocks = BlockAllocator(n_blocks)
+        return Scheduler(reqs, max_batch, blocks=blocks,
+                         blocks_needed=lambda r: 2, policy=policy,
+                         prefix=prefix), blocks
+
+    def test_queue_and_ttft_survive_preemption(self):
+        req = _req(0, arrival=0.5, max_new=8)
+        sched, _ = self._sched([req])
+        sched.poll(1.0)
+        sched.admit(1.0)
+        assert req.queue_s == pytest.approx(0.5)
+        req.emit(7, 1.2)
+        assert req.ttft_s == pytest.approx(0.7)
+        sched.preempt(req.slot, 2.0)
+        assert req.preemptions == 1 and req.slot is None
+        assert req.queue_s == pytest.approx(0.5)     # first-admission value
+        sched.admit(3.0)                             # re-admitted much later
+        assert req.queue_s == pytest.approx(0.5)     # ...and unchanged
+        req.emit(9, 3.1)                             # restore emission
+        assert req.ttft_s == pytest.approx(0.7)      # TTFT never resets
+        assert req.tokens == [7, 9]
+
+    def test_preempt_publishes_only_covered_tokens(self):
+        """covered= caps the publish at the KV actually written: with
+        covered=0 nothing is published (no stray pins), and the blocks
+        all free."""
+        bs = 4
+        prefix = PrefixCache(bs, align_tokens=bs)
+        req = _req(0, plen=8, max_new=4)
+        blocks = BlockAllocator(8)
+        sched = Scheduler([req], 1, blocks=blocks,
+                          blocks_needed=lambda r: 3, prefix=prefix)
+        sched.poll(0.0)
+        sched.admit(0.0)
+        for _ in range(2):
+            blocks.alloc(req.rid)
+        sched.preempt(req.slot, 1.0, covered=0)
+        assert len(prefix) == 0
+        assert blocks.free_count == 8
+
+    def test_preempt_publish_enables_restore_hit(self):
+        bs = 4
+        prefix = PrefixCache(bs, align_tokens=bs)
+        req = _req(0, plen=8, max_new=8)
+        blocks = BlockAllocator(8)
+        sched = Scheduler([req], 1, blocks=blocks,
+                          blocks_needed=lambda r: 4, prefix=prefix)
+        sched.poll(0.0)
+        sched.admit(0.0)
+        for _ in range(2):
+            blocks.alloc(req.rid)
+        req.emit(3, 0.5)                 # full_seq now 9 tokens, 2 blocks
+        sched.preempt(req.slot, 1.0, covered=8)
+        assert len(prefix) == 2          # both full blocks published
+        admits = sched.admit(2.0)
+        assert admits and admits[0][1] is req
+        assert req.prefix_blocks and len(req.prefix_blocks) == 2
+        assert req.prefix_hit_tokens == 8
+        assert prefix.stats()["restores"] == 1
+        assert prefix.stats()["restored_tokens"] == 8
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_accounting_churn_invariants(self, seed):
+        """Random admit -> emit -> preempt -> re-admit -> retire churn:
+        queue_s is pinned to the FIRST admission and non-negative, ttft_s
+        is pinned to the first emission, latency_s >= ttft_s >= queue_s
+        ordering holds where defined (all NaN until defined, never
+        negative), preemption counts are exact, and after the trace drains
+        (plus LRU drain) the allocator's free set is exactly the initial
+        one."""
+        rng = random.Random(seed)
+        bs = 4
+        n_blocks = rng.randint(10, 24)
+        reqs = [Request(rid=i,
+                        prompt=np.arange(rng.randint(1, 12),
+                                         dtype=np.int32) + i,
+                        max_new=rng.randint(1, 6),
+                        arrival_s=round(rng.random() * 2, 3),
+                        priority=rng.randint(0, 2))
+                for i in range(rng.randint(1, 10))]
+        pol = SLOPolicy(aging_s=rng.choice([0.5, 5.0, 50.0]))
+        blocks = BlockAllocator(n_blocks)
+        initial_free = sorted(b for pool in blocks._free for b in pool)
+        prefix = PrefixCache(bs, align_tokens=bs)
+        needed = lambda r: min(n_blocks,
+                               len(r.full_seq) // bs + 2)   # worst case
+        sched = Scheduler(reqs, max_batch=rng.randint(1, 3), blocks=blocks,
+                          blocks_needed=needed, prefix=prefix, policy=pol)
+        first_queue = {}
+        first_ttft = {}
+        now = 0.0
+        guard = 0
+        while not sched.done:
+            guard += 1
+            assert guard < 10_000, "churn failed to drain"
+            now += 0.05 + rng.random() * 0.2
+            sched.poll(now)
+            for slot, req in sched.admit(now):
+                # materialize the hit-exclusive remainder of the coverage
+                have = len(req.prefix_blocks)
+                want = min(needed(req), len(req.full_seq) // bs + 1)
+                for _ in range(max(0, want - have)):
+                    blocks.alloc(req.rid)
+                if req.rid in first_queue:
+                    assert req.queue_s == first_queue[req.rid]
+                else:
+                    first_queue[req.rid] = req.queue_s
+                    assert req.queue_s >= 0
+                req.emit(rng.randrange(100), now)   # first / restore token
+                first_ttft.setdefault(req.rid, req.ttft_s)
+                assert req.ttft_s == first_ttft[req.rid] >= 0
+            for slot in list(sched.running):
+                req = sched.running[slot]
+                if len(req.tokens) >= req.max_new:
+                    sched.retire(slot, now)
+                    assert req.latency_s >= req.ttft_s >= req.queue_s >= 0
+                elif rng.random() < 0.25:
+                    before = req.preemptions
+                    covered = (len(req.full_seq) // bs) * bs \
+                        if rng.random() < 0.5 else 0
+                    sched.preempt(slot, now, covered=covered)
+                    assert req.preemptions == before + 1
+                    assert np.isnan(req.latency_s)
+                else:
+                    req.emit(rng.randrange(100), now)
+        assert len(sched.finished) == len(reqs)
+        prefix.drain(blocks)
+        assert sorted(b for pool in blocks._free
+                      for b in pool) == initial_free
+        assert all(c == 0 for c in blocks.refcount)
+
+
+# ---------------------------------------------------------------------------
+# Metrics: ITL regressions.
+# ---------------------------------------------------------------------------
+class TestITLMetrics:
+    def test_zero_and_one_token_requests_contribute_no_gaps(self):
+        r0 = _req(0)                                  # zero tokens
+        r1 = _req(1)
+        r1.emit(5, 1.0)                               # one token: no gap
+        assert r0.itl_gaps.size == 0
+        assert r1.itl_gaps.size == 0
+
+    def test_summarize_itl_ignores_short_requests(self):
+        """Regression: 0/1-token requests must contribute NOTHING to the
+        ITL percentiles — zeros would fraudulently drag p50 down."""
+        a = _req(0)
+        for i, t in enumerate([0.0, 0.1, 0.2, 0.3]):
+            a.emit(i, t)
+        a.finish_s = 0.3
+        short = _req(1)
+        short.emit(9, 0.05)
+        short.finish_s = 0.05
+        with_short = summarize([a, short], wall_s=1.0)
+        alone = summarize([a], wall_s=1.0)
+        assert with_short["p50_itl_s"] == alone["p50_itl_s"] == \
+            pytest.approx(0.1)
+        assert with_short["p99_itl_s"] == alone["p99_itl_s"]
+
+    def test_summarize_no_requests_has_itl_keys(self):
+        s = summarize([], wall_s=0.0)
+        assert s["p50_itl_s"] == 0.0 and s["p99_itl_s"] == 0.0
+        assert s["preemptions"] == 0
+
+    def test_slo_report_attainment(self):
+        pol = SLOPolicy()
+        ok = _req(0, name="interactive")
+        ok.arrival_s = 0.0
+        for i, t in enumerate([0.1, 0.15, 0.2]):
+            ok.emit(i, t)
+        late = _req(1, name="interactive")
+        late.arrival_s = 0.0
+        late.emit(7, 2.0)                  # blows the 0.5s TTFT deadline
+        unclassed = _req(2, prio=9)
+        rep = slo_report([ok, late, unclassed], pol)
+        ic = rep["interactive"]
+        assert ic["n_requests"] == 2
+        assert ic["ttft_attainment"] == pytest.approx(0.5)
+        assert ic["itl_attainment"] == 1.0          # gaps all 0.05
+        assert rep["batch"]["n_requests"] == 0
+        assert rep["batch"]["ttft_attainment"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Traces.
+# ---------------------------------------------------------------------------
+class TestTraces:
+    def test_poisson_priority_mix_deterministic(self):
+        mix = SLOPolicy().mix([1.0, 1.0, 2.0])
+        a = poisson_trace(32, rate_rps=10, prompt_len=8, max_new=4,
+                          vocab_size=100, seed=3, priority_mix=mix)
+        b = poisson_trace(32, rate_rps=10, prompt_len=8, max_new=4,
+                          vocab_size=100, seed=3, priority_mix=mix)
+        assert [(r.priority, r.slo_class) for r in a] == \
+            [(r.priority, r.slo_class) for r in b]
+        assert {r.slo_class for r in a} <= {"interactive", "standard",
+                                            "batch"}
+        assert len({r.priority for r in a}) > 1
+
+    def test_poisson_priority_mix_validation(self):
+        with pytest.raises(ValueError, match="non-empty"):
+            poisson_trace(4, rate_rps=10, prompt_len=8, max_new=4,
+                          vocab_size=100, priority_mix=[])
+        with pytest.raises(ValueError, match="weights"):
+            poisson_trace(4, rate_rps=10, prompt_len=8, max_new=4,
+                          vocab_size=100, priority_mix=[("a", 0, -1.0)])
+
+    def test_bursty_trace_shape_and_determinism(self):
+        mix = SLOPolicy().mix([1.0, 1.0, 1.0])
+        a = bursty_heavy_tail_trace(16, vocab_size=100, seed=5,
+                                    burst_size=4, mix=mix)
+        b = bursty_heavy_tail_trace(16, vocab_size=100, seed=5,
+                                    burst_size=4, mix=mix)
+        assert [tuple(r.prompt) for r in a] == [tuple(r.prompt) for r in b]
+        assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+        # bursts: 4 groups separated by the burst gap
+        gaps = np.diff([r.arrival_s for r in a])
+        assert (gaps >= 0.5 - 1e-9).sum() == 3
+        assert {len(r.prompt) for r in a} <= {8, 56}
+        with pytest.raises(ValueError, match="long_frac"):
+            bursty_heavy_tail_trace(4, vocab_size=100, seed=0,
+                                    long_frac=1.5)
+        with pytest.raises(ValueError, match="n_requests"):
+            bursty_heavy_tail_trace(0, vocab_size=100, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Engine acceptance: token identity FIFO vs SLO+chunk+preemption.
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def qwen_setup():
+    cfg = reduced_config(get_config("qwen3-8b"))
+    model = build_model(cfg)
+    params = model.quantize(model.init(jax.random.PRNGKey(0)), 8)
+    cfg = dataclasses.replace(cfg, quant_mode="psi8")
+    return cfg, params
+
+
+_POLICY_SPEC = "default@aging=5@reserve=0.1"
+
+
+def _bursty(cfg, n=16, seed=7):
+    pol = parse_slo_spec(_POLICY_SPEC)
+    return bursty_heavy_tail_trace(
+        n, vocab_size=cfg.vocab_size, seed=seed, burst_size=8,
+        burst_gap_s=0.3, long_frac=0.6, mix=pol.mix([3.0, 2.0, 1.0]))
+
+
+class TestSLOServing:
+    def test_requires_paged_and_rope(self, qwen_setup):
+        cfg, params = qwen_setup
+        dense = dataclasses.replace(cfg, cache_layout="dense")
+        with pytest.raises(ValueError, match="paged"):
+            Server(dense, params, max_batch=2, max_seq=64,
+                   slo=parse_slo_spec("default"))
+        with pytest.raises(ValueError, match="paged"):
+            Server(dense, params, max_batch=2, max_seq=64, prefill_chunk=16)
+        nope = dataclasses.replace(cfg, rope="sinusoidal")
+        with pytest.raises(ValueError, match="RoPE"):
+            Server(nope, params, max_batch=2, max_seq=64, prefill_chunk=16)
+
+    def test_chunk_rounds_to_grid(self, qwen_setup):
+        cfg, params = qwen_setup
+        srv = Server(cfg, params, max_batch=2, max_seq=64, prefill_chunk=5)
+        assert srv.prefill_chunk == 16     # lcm(block 16, bucket 16)
+        with pytest.raises(ValueError, match=">= 0"):
+            Server(cfg, params, max_batch=2, max_seq=64, prefill_chunk=-1)
+
+    def test_chunked_prefill_token_identical(self, qwen_setup):
+        """Chunked-only (no SLO): a long prompt split into 16-token pieces
+        interleaved with decode emits exactly the unchunked tokens, decode
+        still compiling once."""
+        cfg, params = qwen_setup
+        trace = lambda: poisson_trace(6, rate_rps=500, prompt_len=56,
+                                      max_new=10, min_new=10,
+                                      vocab_size=cfg.vocab_size, seed=2)
+        plain = Server(cfg, params, max_batch=2, max_seq=96)
+        chunked = Server(cfg, params, max_batch=2, max_seq=96,
+                         prefill_chunk=16)
+        d0, s0 = plain.serve(trace(), continuous=True)
+        d1, s1 = chunked.serve(trace(), continuous=True)
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+        assert toks(d0) == toks(d1)
+        assert s1["prefill_chunks"] > 0
+        assert s1["decode_compiles"] == 1
+        assert s1["blocks_free_end"] == s1["n_blocks"]
+        # accounting: chunked pieces forward the same real token count
+        assert s1["prefilled_tokens"] == s0["prefilled_tokens"]
+
+    def test_slo_preemptive_serving_token_identical(self, qwen_setup):
+        """Acceptance: the bursty heavy-tail trace on a deliberately tight
+        pool serves token-identically under --slo + --prefill-chunk vs
+        the FIFO baseline, with preemptions AND restores observed, the
+        decode step compiling exactly once, and zero block leakage."""
+        cfg, params = qwen_setup
+        pol = parse_slo_spec(_POLICY_SPEC)
+        fifo = Server(cfg, params, max_batch=4, max_seq=112, n_blocks=8)
+        slo = Server(cfg, params, max_batch=4, max_seq=112, n_blocks=8,
+                     prefill_chunk=16, slo=pol)
+        d0, s0 = fifo.serve(_bursty(cfg), continuous=True)
+        d1, s1 = slo.serve(_bursty(cfg), continuous=True)
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+        assert toks(d0) == toks(d1)
+        assert s1["preemptions"] > 0
+        assert s1["prefix_cache"]["restores"] > 0
+        assert s1["prefix_cache"]["restored_tokens"] > 0
+        assert s1["decode_compiles"] == 1
+        assert s1["blocks_free_end"] == s1["n_blocks"]
+        assert s0["blocks_free_end"] == s0["n_blocks"]
+        rep = s1["slo"]["classes"]
+        assert sum(c["n_requests"] for c in rep.values()) == 16
+        assert sum(c["preemptions"] for c in rep.values()) == \
+            s1["preemptions"]
+
+    def test_slo_with_prefix_cache_on_token_identical(self, qwen_setup):
+        """SLO mode composes with --prefix-cache on (shared lookups + swap
+        restores through ONE cache) and stays token-identical."""
+        cfg, params = qwen_setup
+        pcfg = dataclasses.replace(cfg, prefix_cache=True)
+        fifo = Server(cfg, params, max_batch=4, max_seq=112, n_blocks=8)
+        slo = Server(pcfg, params, max_batch=4, max_seq=112, n_blocks=8,
+                     prefill_chunk=16, slo=parse_slo_spec(_POLICY_SPEC))
+        d0, _ = fifo.serve(_bursty(cfg, n=12), continuous=True)
+        d1, s1 = slo.serve(_bursty(cfg, n=12), continuous=True)
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+        assert toks(d0) == toks(d1)
+        assert s1["blocks_free_end"] == s1["n_blocks"]
+
+    @pytest.mark.skipif(len(jax.devices()) < 8,
+                        reason="needs 8 devices (CI distributed leg forces "
+                               "--xla_force_host_platform_device_count=8)")
+    def test_sharded_mesh_token_identical(self, qwen_setup):
+        """SLO + chunked + preemptive serving on a (4,2) mesh (slots and
+        blocks partitioned over the data axis) emits exactly the
+        single-device FIFO tokens, decode still compiling once."""
+        cfg, params = qwen_setup
+        fifo = Server(cfg, params, max_batch=4, max_seq=112, n_blocks=8)
+        meshed = Server(cfg, params, max_batch=4, max_seq=112, n_blocks=8,
+                        prefill_chunk=16, slo=parse_slo_spec(_POLICY_SPEC),
+                        mesh=parse_mesh_spec("4x2"))
+        d0, _ = fifo.serve(_bursty(cfg), continuous=True)
+        d1, s1 = meshed.serve(_bursty(cfg), continuous=True)
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+        assert toks(d0) == toks(d1)
+        assert s1["decode_compiles"] == 1
+        assert s1["slot_shards"] == 4
+        assert s1["blocks_free_end"] == s1["n_blocks"]
