@@ -196,6 +196,44 @@ def poisson_trace(n_requests: int, *, rate_rps: float, prompt_len: int,
     return reqs
 
 
+def replay_round(toks: np.ndarray, active: np.ndarray,
+                 remaining: np.ndarray, eos_id: int):
+    """Host replay of the multi-step decode round's IN-KERNEL retirement
+    recurrence (DESIGN.md §3 "Multi-step decode & host overlap").
+
+    ``toks`` is the raw (M, B) per-step greedy token block a
+    ``decode_multi`` round returned; ``active``/``remaining`` are the
+    round-ENTRY mirrors.  Step by step, exactly as the device scan did::
+
+        for each step, for each entry-active slot:
+            emit toks[step, slot]; remaining -= 1
+            active &= (token != eos_id) and (remaining > 0)
+
+    Because the recurrence is identical (and the device froze retired
+    slots' state via the masked-decode contract), the emitted streams are
+    bit-identical to a step-at-a-time horizon-1 loop, and the returned
+    exit state equals the device carry row-for-row — the serve loop uses
+    it to keep its host mirrors in lockstep with the device-resident
+    carry.  Pure host math: unit-testable without a model.
+
+    Returns (emitted, active_out, remaining_out) — ``emitted[slot]`` is the
+    list of tokens slot emitted this round (EOS included, as in the
+    single-step loop), the arrays are fresh copies.
+    """
+    M, B = toks.shape
+    act = np.asarray(active).copy()
+    rem = np.asarray(remaining).copy()
+    emitted = [[] for _ in range(B)]
+    for m in range(M):
+        for b in np.flatnonzero(act):
+            t = int(toks[m, b])
+            emitted[b].append(t)
+            rem[b] -= 1
+            if t == eos_id or rem[b] <= 0:
+                act[b] = False
+    return emitted, act, rem
+
+
 # ---------------------------------------------------------------------------
 # Slot allocation.
 # ---------------------------------------------------------------------------

@@ -68,9 +68,10 @@ from repro.core.quantizer import (fake_quant_param_tree, parse_policy,
 from repro.launch.mesh import make_mesh
 from repro.launch.prefix_cache import PrefixCache
 from repro.launch.scheduler import (BlockAllocator, Request, Scheduler,
-                                    poisson_trace, summarize)
+                                    poisson_trace, replay_round, summarize)
 from repro.launch.slo import parse_slo_spec, slo_report
 from repro.models import build_model, kvcache as kvc
+from repro.perf.roofline_model import PEAK_FLOPS, decode_macs_per_token
 from repro.runtime.executor import Executor
 
 # Prompt lengths are rounded up to a multiple of this before prefill so the
@@ -128,9 +129,20 @@ class Server:
                  executor: Optional[Executor] = None,
                  n_blocks: Optional[int] = None,
                  speculative: Optional[Tuple[int, int]] = None,
-                 prefill_chunk: int = 0, slo=None):
+                 prefill_chunk: int = 0, slo=None,
+                 decode_horizon: int = 1, watts: float = 215.0):
         self.cfg = cfg
         self.paged = cfg.resolved_cache_layout == kvc.PAGED
+        # Multi-step decode (DESIGN.md §3 "Multi-step decode & host
+        # overlap"): horizon-M rounds of the on-device token loop; 1 = the
+        # classic step-at-a-time path.  ``watts`` is the CLI stand-in board
+        # power for the tokens-per-joule stat (default: a TPU v5e-class
+        # figure, matching the roofline's PEAK_FLOPS denominator).
+        self.decode_horizon = int(decode_horizon or 1)
+        if self.decode_horizon < 1:
+            raise ValueError(
+                f"decode_horizon={decode_horizon} must be >= 1")
+        self.watts = float(watts)
         # Self-speculative decoding (DESIGN.md §"Self-speculative decoding"):
         # (draft_bits, k) or None.  The Executor validates the deep
         # preconditions (paged layout, k <= block_size, quantized params);
@@ -139,6 +151,13 @@ class Server:
         self.spec = tuple(speculative) if speculative else None
         self.spec_k = self.spec[1] if self.spec else 0
         self._spec_overhang = self.spec_k - 1 if self.spec else 0
+        if self.decode_horizon > 1 and self.spec:
+            raise ValueError(
+                "--decode-horizon > 1 does not compose with --speculative: "
+                "a speculative round is already a fused multi-token device "
+                "unit with its own acceptance loop — pick ONE multi-token "
+                "decode strategy (drop --speculative or set the horizon "
+                "to 1)")
         # Shared-prefix block reuse (DESIGN.md §3 "Prefix cache"):
         # validated here so an impossible combination (dense layout, mrope)
         # fails at construction, not mid-serve.
@@ -204,10 +223,15 @@ class Server:
                 raise ValueError(
                     f"injected executor was built with speculative="
                     f"{executor.speculative}; Server asked for {self.spec}")
+            if executor.decode_horizon != self.decode_horizon:
+                raise ValueError(
+                    f"injected executor was built with decode_horizon="
+                    f"{executor.decode_horizon}; Server asked for "
+                    f"{self.decode_horizon}")
         self.executor = executor if executor is not None else Executor(
             cfg, params, max_batch=max_batch, max_seq=max_seq, mesh=mesh,
             n_blocks=n_blocks if self.paged else None,
-            speculative=self.spec)
+            speculative=self.spec, decode_horizon=self.decode_horizon)
         self.cache_bytes = kvc.cache_nbytes(jax.eval_shape(
             self.executor._init_cache_fn))
         # Recurrent state absorbs pad tokens, so SSM/hybrid (and whisper's
@@ -507,6 +531,22 @@ class Server:
         tok = np.zeros((B, 1), np.int32)
         act = np.zeros((B,), bool)
         bt = (np.full((B, ex.n_bt), -1, np.int32) if self.paged else None)
+        if self.decode_horizon > 1:
+            # multi-step engine: the horizon-M round is THE decode shape;
+            # the single-step twin must never trace (same contract shape as
+            # the speculative pair below)
+            rem = np.zeros((B,), np.int32)
+            jax.block_until_ready(ex.decode_multi(
+                tok, tok, act, rem, cache, block_table=bt,
+                eos_id=self.eos_id))
+            sizes = ex.multi_cache_sizes()
+            if sizes != {"decode_multi": 1, "decode": 0}:
+                raise RuntimeError(
+                    f"multi-step compile contract violated at warmup: want "
+                    f"exactly one horizon-{self.decode_horizon} round "
+                    f"executable with the single-step decode untraced, got "
+                    f"{sizes}")
+            return 1
         if not self.spec:
             jax.block_until_ready(ex.decode(tok, tok, act, cache,
                                             block_table=bt))
@@ -710,12 +750,69 @@ class Server:
         tok = np.zeros((B, 1), np.int32)
         pos = np.zeros((B, 1), np.int32)
         act = np.zeros((B,), bool)
-        bt = (np.full((B, ex.n_bt), -1, np.int32) if self.paged else None)
+        # remaining emission budget per slot — the multi-step round's
+        # in-kernel retirement counter (mirrors Executor.decode_multi's
+        # ``remaining`` input; unused state at horizon 1)
+        rem = np.zeros((B,), np.int32)
+        bt = (ex.make_block_table() if self.paged else None)
         chunking: Dict[int, int] = {}      # slot -> next piece offset
         steps = 0
         n_chunks = 0
+        rounds = 0
+        host_syncs = 0                     # host-blocking d2h syncs
+        loop_iters = 0
         peak_running = 0
+        M = self.decode_horizon
+        multi = M > 1
+        # Round pipelining (DESIGN.md §3 "Multi-step decode & host
+        # overlap"): dispatch round N+1 from the DEVICE-resident carry
+        # before the host processes round N's tokens, so scheduler work
+        # overlaps device compute.  SLO preemption and chunked prefill
+        # mutate host slot state at arbitrary boundaries, so those modes
+        # drain every round immediately instead (still one sync per M
+        # tokens — only the overlap is forgone).
+        pipeline = multi and self.slo is None and not self.prefill_chunk
+        pending = None        # in-flight round's (M, B) device tokens
+        carry = None          # device carry chained round-to-round
         t0 = clock()
+
+        def process_toks(toks_dev) -> None:
+            """Sync one finished round and replay the device's retirement
+            recurrence over the host mirrors: emit per-slot streams, retire
+            EOS/budget-exhausted slots, and leave tok/pos/act/rem exactly
+            equal to the device carry row-for-row (the identity argument in
+            DESIGN.md — same recurrence, same state)."""
+            nonlocal host_syncs
+            toks = np.asarray(toks_dev)                  # (M, B) host sync
+            host_syncs += 1
+            now = clock() - t0
+            emitted, act_out, rem_out = replay_round(toks, act, rem,
+                                                     self.eos_id)
+            for slot in list(sched.running):
+                if not emitted[slot]:
+                    continue       # not entry-active (free / chunking slot)
+                req = sched.running[slot]
+                for t in emitted[slot]:
+                    req.emit(t, now)
+                pos[slot, 0] += len(emitted[slot])
+                tok[slot, 0] = emitted[slot][-1]
+                rem[slot] = rem_out[slot]
+                if not act_out[slot]:
+                    act[slot] = False
+                    sched.retire(slot, now)
+                    if self.paged:
+                        bt[slot, :] = -1
+
+        def drain() -> None:
+            """Process the in-flight round, if any.  MUST run before any
+            host mutation of tok/pos/act/rem outside :func:`process_toks`
+            (admission emit, chunk completion, preemption) — the mirrors
+            lag the device by one round while a round is in flight, and
+            mutating stale mirrors would fork the state."""
+            nonlocal pending
+            if pending is not None:
+                prev, pending = pending, None
+                process_toks(prev)
 
         def emit_first(slot: int, req: Request, first: int,
                        now: float) -> None:
@@ -723,6 +820,8 @@ class Server:
             (shared by fresh admission, final chunk, and restore — the
             feed position is uniformly the index of the newest token in
             ``full_seq``, whose KV the NEXT step writes)."""
+            nonlocal carry
+            carry = None       # host mutated: rebuild from mirrors
             req.emit(first, now)
             if first == self.eos_id or len(req.tokens) >= req.max_new:
                 sched.retire(slot, now)
@@ -732,12 +831,15 @@ class Server:
             tok[slot, 0] = first
             pos[slot, 0] = len(req.prompt) + len(req.tokens) - 1
             act[slot] = True
+            rem[slot] = req.max_new - len(req.tokens)
 
         def preempt_slot(vslot: int, vnow: float) -> None:
             """Evict a victim: publish only the KV actually written (a
             decode victim's pending token never was — ``pos`` is the feed
             position; a chunking victim has exactly ``[0, cur)``), clear
             the slot state, and re-queue it at its policy position."""
+            nonlocal carry
+            carry = None       # host mutated: rebuild from mirrors
             covered = chunking.pop(vslot, None)
             if covered is None:
                 covered = int(pos[vslot, 0])
@@ -777,13 +879,17 @@ class Server:
             return True
 
         while not sched.done:
+            loop_iters += 1
             now = clock() - t0
             sched.poll(now)
             if continuous or not sched.running:
                 admits = sched.admit(now)
                 if admits:
+                    drain()      # mirrors must be current before emit_first
                     firsts, cache = self._prefill_admits(cache, admits,
                                                          sched, bt, chunking)
+                    if any(f is not None for f in firsts):
+                        host_syncs += 1
                     now = clock() - t0
                     peak_running = max(peak_running, len(sched.running))
                     for (slot, req), first in zip(admits, firsts):
@@ -799,6 +905,7 @@ class Server:
                                                    chunking)
                 n_chunks += 1
                 if first is not None:
+                    host_syncs += 1
                     emit_first(slot, sched.running[slot], first,
                                clock() - t0)
             if not sched.running:
@@ -809,7 +916,11 @@ class Server:
                     break                      # everything drained
                 wait = nxt - (clock() - t0)
                 if wait > 0:
-                    time.sleep(min(wait, 0.005))
+                    # sleep the actual remaining gap (capped so a clock
+                    # hiccup can't oversleep an arrival by much) — the old
+                    # 5 ms slices busy-spun O(gap / 5ms) iterations per
+                    # arrival gap on sparse traces
+                    time.sleep(min(wait, 0.25))
                 continue
             if not act.any():
                 continue       # every running slot is still mid-chunking
@@ -819,14 +930,24 @@ class Server:
                 # worst case at admission so the alloc cannot fail; the SLO
                 # policy's optimistic reservation secures the shortfall
                 # here (eviction, then preemption).  A plain step writes
-                # one position; a speculative round writes k consecutive.
-                span = max(self.spec_k, 1)
+                # one position; a speculative round writes k consecutive; a
+                # multi-step round writes up to M — and with a round in
+                # flight the device carry can already sit M ahead of the
+                # host mirror, so the pipelined span doubles.  Positions
+                # past the request's final feed (prompt + max_new - 2)
+                # are never written, so the span is capped there and the
+                # FIFO worst-case reservation still covers it.
+                span = max(self.spec_k, M)
+                if pipeline and pending is not None:
+                    span += M
                 for slot, req in list(sched.running.items()):
                     if not act[slot]:
                         continue        # chunking, or preempted just now
                     p0 = int(pos[slot, 0])
+                    hi = min(p0 + span - 1,
+                             len(req.prompt) + req.max_new - 2)
                     for li in range(p0 // self.block_size,
-                                    (p0 + span - 1) // self.block_size + 1):
+                                    hi // self.block_size + 1):
                         if bt[slot, li] < 0:
                             if (self.slo is not None
                                     and not secure_one(req)):
@@ -838,10 +959,34 @@ class Server:
             if self.spec:
                 cache = self._spec_round(sched, cache, tok, pos, act, bt,
                                          lambda: clock() - t0)
+                host_syncs += 2          # draft + verdict materializations
                 steps += 1
+                continue
+            if multi:
+                # one horizon-M round: chained from the device carry when
+                # the host hasn't touched its mirrors since the last round
+                # (zero carry upload in steady state), rebuilt from the
+                # mirrors otherwise
+                src = carry if carry is not None else {
+                    "token": tok, "pos": pos, "active": act,
+                    "remaining": rem}
+                toks_dev, carry, cache = ex.decode_multi(
+                    src["token"], src["pos"], src["active"],
+                    src["remaining"], cache, block_table=bt,
+                    eos_id=self.eos_id)
+                steps += M
+                rounds += 1
+                prev, pending = pending, toks_dev
+                if prev is not None:
+                    # double buffer: the device is already running round
+                    # N+1 while the host replays round N here
+                    process_toks(prev)
+                if not pipeline:
+                    drain()
                 continue
             new_tok, cache = ex.decode(tok, pos, act, cache, block_table=bt)
             new_tok = np.asarray(new_tok)
+            host_syncs += 1
             steps += 1
             now = clock() - t0
             for slot in list(sched.running):
@@ -858,6 +1003,7 @@ class Server:
                         bt[slot, :] = -1
                 else:
                     tok[slot, 0] = t
+        drain()      # a trailing all-masked round can still be in flight
         wall = clock() - t0
         stats = summarize(sched.finished, wall,
                           mode="continuous" if continuous else "static")
@@ -867,6 +1013,34 @@ class Server:
         stats["cache_layout"] = "paged" if self.paged else "dense"
         stats["cache_bytes"] = self.cache_bytes
         stats["peak_concurrency"] = peak_running
+        # Host-overlap accounting (DESIGN.md §3 "Multi-step decode & host
+        # overlap"): every host-BLOCKING device->host materialization the
+        # loop paid (decode steps / multi-step rounds / spec draft+verdict
+        # pairs / prefill first-token reads).  The per-token ratio is the
+        # serve_bench §7 gate: horizon M cuts it ~Mx.
+        stats["host_syncs"] = host_syncs
+        stats["host_syncs_per_token"] = round(
+            host_syncs / max(stats["tokens"], 1), 4)
+        stats["loop_iters"] = loop_iters
+        stats["decode_horizon"] = self.decode_horizon
+        if multi:
+            stats["decode_rounds"] = rounds
+        # MFU / tokens-per-joule (the paper's MACs/W figure of merit tied
+        # back to measured throughput; ROADMAP).  MACs/token comes from the
+        # analytic roofline at the mean final context; peak is the
+        # roofline's per-chip constant times the mesh size; energy is the
+        # --watts CLI stand-in (board power), so tokens/J = tok/s / W.
+        fin = sched.finished
+        mean_ctx = (sum(len(r.full_seq) for r in fin) / len(fin)
+                    if fin else 1.0)
+        macs_tok = decode_macs_per_token(self.cfg, int(mean_ctx))
+        n_dev = int(ex.mesh.size)
+        stats["macs_per_token"] = round(macs_tok, 1)
+        stats["mfu"] = round(
+            2.0 * macs_tok * stats["tok_per_s"] / (PEAK_FLOPS * n_dev), 8)
+        stats["watts"] = self.watts
+        stats["tokens_per_joule"] = round(
+            stats["tok_per_s"] / self.watts, 4) if self.watts > 0 else 0.0
         if self.spec:
             rounds = int(sum(r.spec_rounds for r in sched.finished))
             accepted = int(sum(r.spec_accepted for r in sched.finished))
@@ -902,6 +1076,9 @@ class Server:
             stats["block_size"] = self.block_size
             stats["n_blocks"] = ex.n_blocks
             stats["paged_attn_route"] = ex.paged_attn_route
+            # DeviceBlockTable transfer accounting: reuses are dispatches
+            # that moved ZERO table bytes host->device
+            stats["block_table_transfers"] = dict(bt.stats)
             stats["peak_blocks_in_use"] = blocks.high_watermark
             stats["block_util_pct"] = round(
                 100.0 * blocks.high_watermark / max(ex.n_blocks, 1), 1)
@@ -915,6 +1092,12 @@ class Server:
         return sched.finished, stats
 
     def decode_cache_size(self) -> int:
+        """Compiled decode-side executable count for the engine's ACTIVE
+        decode path: the horizon-M round when multi-step decode is on
+        (the single-step twin is never traced then — warmup asserts it),
+        else the classic single step."""
+        if self.decode_horizon > 1:
+            return self.executor.decode_multi_cache_size()
         return self.executor.decode_cache_size()
 
 
@@ -988,7 +1171,10 @@ def build_server(args) -> Tuple[Server, object]:
     server = Server(cfg, params, max_batch=args.max_batch, max_seq=max_seq,
                     eos_id=args.eos_id, mesh=mesh,
                     n_blocks=getattr(args, "cache_blocks", None),
-                    speculative=spec, prefill_chunk=chunk, slo=slo)
+                    speculative=spec, prefill_chunk=chunk, slo=slo,
+                    decode_horizon=int(getattr(args, "decode_horizon", 1)
+                                       or 1),
+                    watts=float(getattr(args, "watts", 215.0)))
     return server, cfg
 
 
@@ -1124,6 +1310,19 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
                     help="per-class arrival weights, one per --slo class "
                          "in declaration order; each request draws its "
                          "class i.i.d. from the normalized mix")
+    ap.add_argument("--decode-horizon", type=int, default=1, metavar="M",
+                    help='multi-step decode (DESIGN.md §3 "Multi-step '
+                         'decode & host overlap"): fuse M decode steps '
+                         'into ONE on-device round (lax.scan) with EOS/'
+                         'max-new retirement masked in-kernel, and let the '
+                         'host process each round\'s tokens while the '
+                         'device runs the next — ~Mx fewer host syncs per '
+                         'token, bit-token-identical to M=1.  Does not '
+                         'compose with --speculative (hard error).')
+    ap.add_argument("--watts", type=float, default=215.0,
+                    help="board-power stand-in for the tokens-per-joule "
+                         "stat (default: a TPU v5e-class figure, matching "
+                         "the roofline peak-FLOPs denominator)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="-1 disables EOS retirement")
     ap.add_argument("--seed", type=int, default=0)
@@ -1165,9 +1364,15 @@ def main():
             cache_info += (f" | preemptions {stats['preemptions']}, "
                            f"restores "
                            f"{stats.get('prefix_cache', {}).get('restores', 0)}")
+        if stats["decode_horizon"] > 1:
+            cache_info += (f" | horizon {stats['decode_horizon']}: "
+                           f"{stats['decode_rounds']} rounds, "
+                           f"{stats['host_syncs_per_token']:.3f} syncs/tok")
         print(f"[{mode}] served {stats['n_requests']} requests: "
               f"{stats['tokens']} tokens in {stats['wall_s']:.3f}s = "
               f"{stats['tok_per_s']:.1f} tok/s | "
+              f"mfu {stats['mfu']:.2e} | "
+              f"{stats['tokens_per_joule']:.2f} tok/J @ {stats['watts']:.0f}W | "
               f"latency p50 {stats['p50_latency_s'] * 1e3:.0f}ms "
               f"p99 {stats['p99_latency_s'] * 1e3:.0f}ms | "
               f"ttft p50 {stats['p50_ttft_s'] * 1e3:.0f}ms | "

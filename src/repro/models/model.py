@@ -279,6 +279,63 @@ class Model:
         logits = self._logits(params, x)
         return logits[:, 0], cache.replace(kv=new_kv)
 
+    def decode_scan(self, params, batch, cache: KVCache, length, mesh=None):
+        """Fused M-step greedy decode loop with IN-KERNEL retirement
+        (DESIGN.md §3 "Multi-step decode & host overlap").
+
+        batch: {"token": (B, 1), "pos": (B, 1), "active": (B,) bool,
+        "remaining": (B,) int32 — per-slot emission budget (max_new minus
+        tokens already emitted), "eos_id": () int32 scalar (-1 disables;
+        greedy tokens are always >= 0), optional "block_table": (B, n_bt)}.
+
+        Each step runs the standard masked :meth:`decode_step` body, then
+        applies the retirement recurrence ON DEVICE::
+
+            remaining -= active            # this step consumed one budget
+            active   &= (next != eos_id) & (remaining > 0)
+
+        so a slot that hits EOS or exhausts max_new mid-round rides out the
+        rest of the round with ``active`` False — the masked-decode contract
+        freezes its cache rows, making the extra steps pure throwaway
+        compute.  ``pos`` advances only on entry-active steps and ``token``
+        freezes at the last live emission, so the returned carry is exactly
+        the state a step-at-a-time host loop would have produced: the host
+        replays the same recurrence (``scheduler.replay_round``) over the
+        raw (M, B) token block to recover the bit-identical streams.  The
+        block table is scan-invariant: the host pre-allocates every block
+        the round can touch before dispatch (same contract as the
+        speculative draft scan).
+
+        Returns ((M, B) raw per-step greedy tokens, final carry dict with
+        the same token/pos/active/remaining keys, cache).
+        """
+        bt = batch.get("block_table") if cache.paged else None
+        if cache.paged and bt is None:
+            raise ValueError('paged decode_scan needs batch["block_table"]')
+        eos = batch["eos_id"]
+
+        def step(carry, _):
+            tok, p, act, rem, kv = carry
+            b = {"token": tok, "pos": p, "active": act}
+            if self.cfg.rope == "mrope":
+                b["positions"] = jnp.broadcast_to(
+                    p[:, None, :], (p.shape[0], 3, 1))
+            if bt is not None:
+                b["block_table"] = bt
+            logits, kv = self.decode_step(params, b, kv, mesh=mesh)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)        # (B,)
+            rem = rem - act.astype(jnp.int32)
+            new_act = act & (nxt != eos) & (rem > 0)
+            tok = jnp.where(act[:, None], nxt[:, None], tok)
+            p = p + act[:, None].astype(jnp.int32)
+            return (tok, p, new_act, rem, kv), nxt
+
+        (tok, p, act, rem, cache), toks = jax.lax.scan(
+            step, (batch["token"], batch["pos"], batch["active"],
+                   batch["remaining"], cache), None, length=length)
+        carry = {"token": tok, "pos": p, "active": act, "remaining": rem}
+        return toks, carry, cache
+
     def verify_step(self, params, batch, cache: KVCache, mesh=None):
         """Speculative VERIFY: score k consecutive tokens per slot in one
         decode-shaped batched pass (DESIGN.md §"Self-speculative decoding").

@@ -50,12 +50,75 @@ def single_device_mesh():
     return jax.sharding.Mesh(dev, ("data", "model"))
 
 
+class DeviceBlockTable:
+    """Host-mirrored, device-resident block table (DESIGN.md §3 "Multi-step
+    decode & host overlap").
+
+    The host (max_batch, n_bt) int32 mirror stays authoritative — the
+    scheduler reads and writes it exactly like the plain ndarray it
+    replaces — but every ``__setitem__`` records which slot rows went dirty,
+    and :meth:`device` refreshes the cached device copy INCREMENTALLY: an
+    unchanged table returns the same committed device array (zero host->
+    device transfer, regression-tested), a few dirty rows go up as one-row
+    scatters through a single jitted ``at[slot].set(row)`` executable, and
+    only a mostly-rewritten table falls back to a full upload.  ``stats``
+    counts each path so the serve loop can report transfer behavior.
+    """
+
+    def __init__(self, executor: "Executor"):
+        if not executor.paged:
+            raise ValueError("DeviceBlockTable mirrors the paged layout's "
+                             "block table; this executor is dense")
+        self._ex = executor
+        self.host = np.full((executor.max_batch, executor.n_bt), -1,
+                            np.int32)
+        self._device = None
+        self._dirty = set()
+        self.version = 0                       # host mutation counter
+        self.stats = {"reuses": 0, "row_updates": 0, "full_uploads": 0}
+
+    @property
+    def shape(self):
+        return self.host.shape
+
+    def __getitem__(self, idx):
+        return self.host[idx]
+
+    def __setitem__(self, idx, val):
+        self.host[idx] = val
+        slot = idx[0] if isinstance(idx, tuple) else idx
+        for s in np.atleast_1d(np.asarray(slot)).reshape(-1):
+            self._dirty.add(int(s))
+        self.version += 1
+
+    def device(self):
+        """The table as a committed device array in the decode-step input
+        sharding, refreshed only where the host mirror changed since the
+        last call."""
+        sh = self._ex._step_shardings["block_table"]
+        if self._device is None or 2 * len(self._dirty) >= self.host.shape[0]:
+            self._device = jax.device_put(jnp.asarray(self.host), sh)
+            self.stats["full_uploads"] += 1
+        elif self._dirty:
+            # one (n_bt,) row per dirty slot through the shared scatter
+            # executable — NOT donated: an in-flight pipelined round may
+            # still be reading the previous table version.
+            for s in sorted(self._dirty):
+                self._device = self._ex._bt_set_row(
+                    self._device, jnp.int32(s), jnp.asarray(self.host[s]))
+            self.stats["row_updates"] += len(self._dirty)
+        else:
+            self.stats["reuses"] += 1
+        self._dirty.clear()
+        return self._device
+
+
 class Executor:
     """Owns mesh, placement, and the compiled serving entry points."""
 
     def __init__(self, cfg, params, *, max_batch: int, max_seq: int,
                  mesh=None, model=None, n_blocks: int = None,
-                 speculative=None):
+                 speculative=None, decode_horizon: int = 1):
         if model is None:
             from repro.models import build_model   # lazy: models imports us
             model = build_model(cfg)
@@ -118,6 +181,21 @@ class Executor:
         else:
             self.spec_bits = self.spec_k = 0
 
+        # ---- multi-step decode (DESIGN.md §3 "Multi-step decode & host
+        # overlap"): a horizon-M on-device token loop with in-kernel
+        # retirement; M = 1 keeps the classic one-step path untraced ----
+        self.decode_horizon = int(decode_horizon) if decode_horizon else 1
+        if self.decode_horizon < 1:
+            raise ValueError(
+                f"decode_horizon={decode_horizon} must be >= 1")
+        if self.decode_horizon > 1 and self.speculative is not None:
+            raise ValueError(
+                "--decode-horizon > 1 does not compose with --speculative: "
+                "a speculative round is already a fused multi-token device "
+                "unit with its own acceptance loop — pick ONE multi-token "
+                "decode strategy (drop --speculative or set the horizon "
+                "to 1)")
+
         # ---- placement: params now, cache/input shardings precomputed ----
         self.param_shardings = shr.to_shardings(
             shr.param_specs(params, cfg, self.mesh, mode="serve"), self.mesh)
@@ -149,6 +227,10 @@ class Executor:
             # rule as every other step input (dim 0 is the slot dim)
             step_inputs["spec_tokens"] = jax.ShapeDtypeStruct(
                 (max_batch, self.spec_k), jnp.int32)
+        if self.decode_horizon > 1:
+            # per-slot emission budget for the in-kernel retirement mask
+            step_inputs["remaining"] = jax.ShapeDtypeStruct(
+                (max_batch,), jnp.int32)
         self._step_shardings = shr.to_shardings(
             shr.serve_batch_specs(cfg, self.mesh, step_inputs), self.mesh)
 
@@ -239,6 +321,39 @@ class Executor:
                 self._insert_burst_fn, donate_argnums=(0,),
                 out_shardings=self.cache_shardings)
 
+        if self.paged:
+            # shared one-row scatter for the device-resident block table
+            # (DeviceBlockTable.device): compiles once, moves one (n_bt,)
+            # row per dirty slot.  Not donated — a pipelined in-flight
+            # round may still hold the previous table array as an input.
+            self._bt_set_row = jax.jit(
+                lambda t, s, row: t.at[s].set(row),
+                out_shardings=self._step_shardings["block_table"])
+
+        if self.decode_horizon > 1:
+            # The multi-step round: same donation + pinned-out_shardings
+            # contract as _decode, with the carry pinned to the decode-step
+            # INPUT shardings (shr.decode_carry_specs) so round N+1 can
+            # consume round N's output carry with zero resharding — the
+            # round compiles exactly once per mesh and plain _decode is
+            # never traced (asserted at serve warmup).
+            carry_struct = {
+                k: step_inputs[k]
+                for k in ("token", "pos", "active", "remaining")}
+            carry_sh = shr.to_shardings(
+                shr.decode_carry_specs(cfg, self.mesh, carry_struct),
+                self.mesh)
+            if self.paged:
+                self._decode_multi = jax.jit(
+                    self._decode_multi_fn_paged, donate_argnums=(7,),
+                    out_shardings=(tok_sh, carry_sh, self.cache_shardings))
+            else:
+                self._decode_multi = jax.jit(
+                    self._decode_multi_fn, donate_argnums=(6,),
+                    out_shardings=(tok_sh, carry_sh, self.cache_shardings))
+        else:
+            self._decode_multi = None
+
         # ---- elastic / straggler: no-op on a single-process mesh ----
         self.monitor = (StragglerMonitor(n_hosts=jax.process_count())
                         if jax.process_count() > 1 else None)
@@ -295,7 +410,8 @@ class Executor:
         return Executor(self.cfg, self.params, max_batch=self.max_batch,
                         max_seq=self.max_seq, mesh=mesh, model=self.model,
                         n_blocks=self.n_blocks if self.paged else None,
-                        speculative=self.speculative)
+                        speculative=self.speculative,
+                        decode_horizon=self.decode_horizon)
 
     def observe_step(self, step_times):
         """Feed per-host step times to the straggler monitor; returns its
@@ -358,6 +474,30 @@ class Executor:
         logits, cache = self.model.decode_step(params, batch, cache,
                                                mesh=self.mesh)
         return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+    def _decode_multi_fn(self, params, token, pos, active, remaining,
+                         eos_id, cache):
+        """Horizon-M on-device decode round (dense layout): M masked decode
+        steps under one dispatch, EOS/max-new retirement applied in-kernel
+        (``Model.decode_scan``).  Returns ((M, B) raw step tokens, the
+        final carry in decode-input shardings, cache)."""
+        batch = {"token": token, "pos": pos, "active": active,
+                 "remaining": remaining, "eos_id": eos_id}
+        toks, carry, cache = self.model.decode_scan(
+            params, batch, cache, self.decode_horizon, mesh=self.mesh)
+        return toks, carry, cache
+
+    def _decode_multi_fn_paged(self, params, token, pos, active, remaining,
+                               eos_id, block_table, cache):
+        """Paged twin of ``_decode_multi_fn``; the block table is
+        scan-invariant (the host pre-allocates the round's span — same
+        contract as the speculative draft scan)."""
+        batch = {"token": token, "pos": pos, "active": active,
+                 "remaining": remaining, "eos_id": eos_id,
+                 "block_table": block_table}
+        toks, carry, cache = self.model.decode_scan(
+            params, batch, cache, self.decode_horizon, mesh=self.mesh)
+        return toks, carry, cache
 
     def _draft_fn_paged(self, params, token, pos, active, block_table,
                         cache):
@@ -512,34 +652,80 @@ class Executor:
         return self._insert_burst(cache, seq_cache, jnp.asarray(slots),
                                   jnp.asarray(valid))
 
+    def make_block_table(self) -> DeviceBlockTable:
+        """A host-mirrored device-resident block table for this executor
+        (paged only).  The serve loop writes the host mirror like a plain
+        ndarray; decode dispatches reuse the committed device copy and pay
+        only incremental row scatters for slots that changed."""
+        return DeviceBlockTable(self)
+
+    def _device_table(self, block_table):
+        """The block table as a committed device array: a
+        :class:`DeviceBlockTable` serves its cached copy (zero transfer
+        when unchanged); a raw host array takes the legacy full upload."""
+        if isinstance(block_table, DeviceBlockTable):
+            return block_table.device()
+        return jax.device_put(jnp.asarray(block_table),
+                              self._step_shardings["block_table"])
+
     def decode(self, token, pos, active, cache, block_table=None):
         """One decode step; inputs are committed slot-over-data so jit
         compiles the distributed step (computation follows data).  One
-        tree-level device_put moves all step inputs (including the paged
-        block table) in a single transfer — this runs once per generated
-        token."""
+        tree-level device_put moves the host step inputs in a single
+        transfer — this runs once per generated token; the block table
+        rides the :meth:`_device_table` cache."""
         put = {"token": jnp.asarray(token), "pos": jnp.asarray(pos),
                "active": jnp.asarray(active)}
-        if self.paged:
-            put["block_table"] = jnp.asarray(block_table)
-        put = jax.device_put(put, self._step_shardings)
+        put = jax.device_put(
+            put, {k: self._step_shardings[k] for k in put})
         if self.paged:
             return self._decode(self.params, put["token"], put["pos"],
-                                put["active"], put["block_table"], cache)
+                                put["active"],
+                                self._device_table(block_table), cache)
         return self._decode(self.params, put["token"], put["pos"],
                             put["active"], cache)
+
+    def decode_multi(self, token, pos, active, remaining, cache,
+                     block_table=None, eos_id: int = -1):
+        """One horizon-M decode ROUND (requires ``decode_horizon > 1``).
+
+        ``token``/``pos``/``active``/``remaining`` may be host arrays (the
+        rebuild path after the host mutated its mirrors) or the device
+        carry dict returned by the previous round — device_put against the
+        identical shardings is a no-op for already-committed leaves, so
+        chaining rounds moves zero carry bytes.  ``eos_id`` is a TRACED
+        scalar (value changes never recompile); -1 disables EOS retirement.
+        Returns ((M, B) raw step tokens — replicated for the host sync,
+        carry dict, cache)."""
+        if self._decode_multi is None:
+            raise ValueError("decode_multi needs decode_horizon > 1 at "
+                             "construction")
+        put = {"token": jnp.asarray(token), "pos": jnp.asarray(pos),
+               "active": jnp.asarray(active),
+               "remaining": jnp.asarray(remaining, jnp.int32)}
+        put = jax.device_put(
+            put, {k: self._step_shardings[k] for k in put})
+        eos = jnp.int32(eos_id)
+        if self.paged:
+            return self._decode_multi(
+                self.params, put["token"], put["pos"], put["active"],
+                put["remaining"], eos, self._device_table(block_table),
+                cache)
+        return self._decode_multi(
+            self.params, put["token"], put["pos"], put["active"],
+            put["remaining"], eos, cache)
 
     def draft(self, token, pos, active, cache, block_table):
         """One fused k-step draft pass with the low-bit view of the serving
         checkpoint.  Same input contract as :meth:`decode`; returns
         ((B, k) draft tokens, cache)."""
         put = {"token": jnp.asarray(token), "pos": jnp.asarray(pos),
-               "active": jnp.asarray(active),
-               "block_table": jnp.asarray(block_table)}
+               "active": jnp.asarray(active)}
         put = jax.device_put(
             put, {k: self._step_shardings[k] for k in put})
         return self._spec_draft(self.draft_params, put["token"], put["pos"],
-                                put["active"], put["block_table"], cache)
+                                put["active"],
+                                self._device_table(block_table), cache)
 
     def verify(self, token, drafts, pos0, active, cache, block_table):
         """One k-token verify pass at the target width.  ``token`` (B, 1)
@@ -551,13 +737,13 @@ class Executor:
         ((B, k) target verdicts, cache)."""
         put = {"token": jnp.asarray(token),
                "spec_tokens": jnp.asarray(drafts),
-               "pos": jnp.asarray(pos0), "active": jnp.asarray(active),
-               "block_table": jnp.asarray(block_table)}
+               "pos": jnp.asarray(pos0), "active": jnp.asarray(active)}
         put = jax.device_put(
             put, {k: self._step_shardings[k] for k in put})
         return self._spec_verify(self.params, put["token"],
                                  put["spec_tokens"], put["pos"],
-                                 put["active"], put["block_table"], cache)
+                                 put["active"],
+                                 self._device_table(block_table), cache)
 
     # jit-cache introspection for the shape-stability tests / stats
     def decode_cache_size(self) -> int:
@@ -586,3 +772,17 @@ class Executor:
         return {"draft": sz(self._spec_draft),
                 "verify": sz(self._spec_verify),
                 "decode": sz(self._decode)}
+
+    def decode_multi_cache_size(self) -> int:
+        """Compiled executable count of the horizon-M round (the
+        compile-once contract at the round shape)."""
+        if self._decode_multi is None:
+            return 0
+        return getattr(self._decode_multi, "_cache_size", lambda: -1)()
+
+    def multi_cache_sizes(self) -> dict:
+        """Decode-side executable counts under a horizon > 1: exactly one
+        round shape, and the single-step twin never traces.  Asserted at
+        serve warmup (the multi-step entry in the warmup ladder)."""
+        return {"decode_multi": self.decode_multi_cache_size(),
+                "decode": self.decode_cache_size()}

@@ -430,6 +430,18 @@ def serve_batch_specs(cfg, mesh: Mesh, batch_tree):
     return jax.tree_util.tree_map(one, batch_tree)
 
 
+def decode_carry_specs(cfg, mesh: Mesh, carry_tree):
+    """Specs for the multi-step decode carry (token / pos / active /
+    remaining, DESIGN.md §3 "Multi-step decode & host overlap").  The carry
+    chains rounds device-side — round N+1 consumes round N's output carry
+    directly — so its out_shardings MUST equal the decode-step input
+    shardings leaf-for-leaf, or every round boundary would reshard.  The
+    rule is therefore exactly :func:`serve_batch_specs` (slot dim over the
+    data axes); this wrapper exists to make that invariant a named API
+    instead of a coincidence."""
+    return serve_batch_specs(cfg, mesh, carry_tree)
+
+
 def to_shardings(spec_tree, mesh: Mesh):
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,

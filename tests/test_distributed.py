@@ -405,3 +405,57 @@ def test_dryrun_entry_on_tiny_mesh():
         print("OK", coll >= 0, sorted(ops))
     """, devices=8, timeout=560)
     assert "OK True" in out
+
+
+def test_multistep_decode_sharded_token_identical():
+    """Horizon-8 multi-step decode on a forced 8-device (4, 2) mesh (slots
+    and paged blocks partitioned over the data axis, the round carry pinned
+    to the same slot-over-data shardings) emits exactly the single-device
+    horizon-1 streams, the scan compiling once; remesh preserves the
+    horizon so an elastic restart keeps the multi-step entry point."""
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        from repro.configs import get_config, reduced_config
+        from repro.launch.mesh import make_mesh
+        from repro.launch.scheduler import Request
+        from repro.launch.serve import Server
+        from repro.models import build_model
+
+        cfg = reduced_config(get_config("qwen3-8b"))
+        model = build_model(cfg)
+        params = model.quantize(model.init(jax.random.PRNGKey(0)), 8)
+        cfg = dataclasses.replace(cfg, quant_mode="psi8")
+        assert cfg.resolved_cache_layout == "paged"
+        rng = np.random.default_rng(0)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(8,))
+                   .astype(np.int32) for _ in range(6)]
+        def mk():
+            return [Request(rid=i, prompt=prompts[i], max_new=mn,
+                            arrival_s=0.0)
+                    for i, mn in enumerate([3, 7, 2, 13, 4, 9])]
+        toks = lambda done: {r.rid: tuple(r.tokens) for r in done}
+
+        ref = Server(cfg, params, max_batch=4, max_seq=64)
+        t_ref = toks(ref.serve(mk(), continuous=True)[0])
+
+        s8 = Server(cfg, params, max_batch=4, max_seq=64,
+                    mesh=make_mesh((4, 2), ("data", "model")),
+                    decode_horizon=8)
+        d8, st8 = s8.serve(mk(), continuous=True)
+        assert toks(d8) == t_ref, (toks(d8), t_ref)
+        assert st8["slot_shards"] == 4
+        assert st8["decode_horizon"] == 8
+        assert st8["decode_compiles"] == 1, st8["decode_compiles"]
+        assert s8.executor.multi_cache_sizes() == \\
+            {"decode_multi": 1, "decode": 0}
+        assert st8["host_syncs_per_token"] < 0.5
+        assert st8["blocks_free_end"] == st8["n_blocks"]
+
+        # elastic restart keeps the horizon (and its compiled entry)
+        ex4 = s8.executor.remesh(devices=jax.devices()[:4])
+        assert ex4.decode_horizon == 8
+        assert ex4.decode_multi_cache_size() == 0   # fresh cache, not lost
+        assert ex4._decode_multi is not None
+        print("OK", st8["slot_shards"])
+    """)
+    assert "OK 4" in out
